@@ -1,0 +1,98 @@
+"""Shared benchmark helpers: timing, stats, CSV/JSON emission."""
+from __future__ import annotations
+
+import json
+import statistics
+import sys
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Sequence
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def timeit(fn: Callable[[], object], repeat: int = 100,
+           warmup: int = 3) -> Dict[str, float]:
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return summarize(samples)
+
+
+def summarize(samples: Sequence[float]) -> Dict[str, float]:
+    s = sorted(samples)
+    n = len(s)
+    return {
+        "n": n,
+        "mean": statistics.fmean(s),
+        "median": s[n // 2],
+        "p25": s[n // 4],
+        "p75": s[(3 * n) // 4],
+        "min": s[0],
+        "max": s[-1],
+        "stdev": statistics.stdev(s) if n > 1 else 0.0,
+    }
+
+
+def emit(name: str, rows: List[Dict]) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.json"
+    path.write_text(json.dumps(rows, indent=1, default=str))
+    return path
+
+
+def print_table(title: str, rows: List[Dict], cols: Sequence[str]) -> None:
+    print(f"\n== {title} ==", flush=True)
+    header = " | ".join(f"{c:>14s}" for c in cols)
+    print(header)
+    print("-" * len(header))
+    for r in rows:
+        print(" | ".join(
+            f"{r.get(c, ''):>14.6g}" if isinstance(r.get(c), float)
+            else f"{str(r.get(c, '')):>14s}" for c in cols), flush=True)
+
+
+# ---------------------------------------------------------------------- #
+# linear regression + k-fold CV (scikit-learn replacement, numpy only)
+# ---------------------------------------------------------------------- #
+import numpy as np  # noqa: E402
+
+
+def linreg(x: np.ndarray, y: np.ndarray):
+    """OLS fit y = beta*x + beta0; returns (beta, beta0)."""
+    A = np.stack([x, np.ones_like(x)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, y, rcond=None)
+    return float(coef[0]), float(coef[1])
+
+
+def mape(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    return float(np.mean(np.abs((y_true - y_pred) / y_true)))
+
+
+def r2(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    ss_res = float(np.sum((y_true - y_pred) ** 2))
+    ss_tot = float(np.sum((y_true - np.mean(y_true)) ** 2))
+    return 1.0 - ss_res / max(ss_tot, 1e-30)
+
+
+def cross_validate(x: np.ndarray, y: np.ndarray, k: int = 5, seed: int = 0):
+    """k-fold CV of the linear model; returns (MAPE, R^2) over the
+    POOLED held-out predictions (per-fold R^2 is undefined for the
+    near-singleton folds that small series produce)."""
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(x))
+    folds = np.array_split(idx, k)
+    y_true, y_pred = [], []
+    for i in range(k):
+        test = folds[i]
+        train = np.concatenate([folds[j] for j in range(k) if j != i])
+        beta, beta0 = linreg(x[train], y[train])
+        y_true.extend(y[test])
+        y_pred.extend(beta * x[test] + beta0)
+    y_true = np.asarray(y_true)
+    y_pred = np.asarray(y_pred)
+    return mape(y_true, y_pred), r2(y_true, y_pred)

@@ -1,0 +1,108 @@
+"""Paper §5.2 — nested MATCHGROW over a 5-level hierarchy (Figs 1, 3, 4).
+
+Level graphs follow Table 2 (L0: 128 nodes ... L4: 1 node).  L0-L1 talk
+over the loopback socket ("internode" — the paper's IPoIB link); levels
+2-4 are in-process ("intranode").  Levels 1-4 are initialized fully
+allocated so every request recurses to L0, exactly like the paper's
+setup.  Tests T1..T8 (Table 1) run ``repeat`` times each; we record the
+per-level (t_match, t_comms, t_add_upd) components.
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List
+
+from repro.core import Jobspec, build_chain, build_cluster
+
+from .common import emit, print_table, summarize
+
+# Table 1: (nodes, sockets, cores) and the paper's request graph size
+TESTS = {
+    "T1": (64, 128, 2048),
+    "T2": (32, 64, 1024),
+    "T3": (16, 32, 512),
+    "T4": (8, 16, 256),
+    "T5": (4, 8, 128),
+    "T6": (2, 4, 64),
+    "T7": (1, 2, 32),
+    "T8": (0, 1, 16),
+}
+
+LEVELS = [(128, "L0"), (8, "L1"), (4, "L2"), (2, "L3"), (1, "L4")]
+
+
+def build_hierarchy():
+    graphs = [build_cluster(nodes=n) for n, _ in LEVELS]
+    h = build_chain(graphs, names=[nm for _, nm in LEVELS],
+                    socket_levels=[1])
+    # levels 1-4 fully allocated (their resources are delegated down)
+    for (n, _), inst in zip(LEVELS[1:], h.instances[1:]):
+        assert inst.match_allocate(
+            Jobspec.hpc(nodes=n, sockets=2 * n, cores=32 * n), jobid="init")
+    # L0: mark the nodes delegated to L1 as occupied so matches return
+    # disjoint resources (subgraph-inclusion discipline)
+    g0 = h.instances[0].graph
+    delegated = [p for p in g0.paths()
+                 if any(f"/node{i}/" in p or p.endswith(f"/node{i}")
+                        for i in range(8))]
+    g0.set_allocated(delegated, "delegated-to-L1")
+    return h
+
+
+def run(repeat: int = 100, tests: List[str] = None) -> List[Dict]:
+    tests = tests or list(TESTS)
+    rows: List[Dict] = []
+    raw: List[Dict] = []
+    for tname in tests:
+        n, s, c = TESTS[tname]
+        js = Jobspec.hpc(nodes=n, sockets=s, cores=c)
+        comp: Dict[str, Dict[str, List[float]]] = {}
+        for rep in range(repeat):
+            h = build_hierarchy()
+            try:
+                sub = h.leaf.match_grow(js, "init")
+                assert sub is not None, tname
+                # one timing per level per rep; compute PURE per-hop
+                # transport: raw t_comms includes the parent's recursive
+                # work, so subtract the parent's recorded total (the
+                # paper's Fig. 1a reports per-hop times).
+                per_level = {inst.name: inst.timings[-1]
+                             for inst in h.instances}
+                names = [nm for _, nm in LEVELS]
+                for i, nm in enumerate(names):
+                    t = per_level[nm]
+                    pure = t.t_comms
+                    if i >= 1:
+                        pt = per_level[names[i - 1]]
+                        pure = max(t.t_comms - pt.total, 0.0)
+                    d = comp.setdefault(nm, {
+                        "match": [], "comms": [], "add_upd": []})
+                    d["match"].append(t.t_match)
+                    d["comms"].append(pure)
+                    d["add_upd"].append(t.t_add_upd)
+                    raw.append({"test": tname, "level": nm, "rep": rep,
+                                "request_size": js.graph_size(),
+                                "match": t.t_match, "comms": pure,
+                                "add_upd": t.t_add_upd})
+            finally:
+                h.close()
+        for level, d in sorted(comp.items()):
+            rows.append({
+                "test": tname, "level": level,
+                "request_size": js.graph_size(),
+                **{f"{k}_{stat}": v
+                   for k, series in d.items()
+                   for stat, v in summarize(series).items()
+                   if stat in ("mean", "median", "p25", "p75", "stdev")},
+            })
+    print_table("nested MATCHGROW components (paper 5.2)",
+                [r for r in rows if r["test"] in ("T2", "T7")],
+                ["test", "level", "request_size", "match_mean",
+                 "comms_mean", "add_upd_mean"])
+    emit("nested_mg", rows)
+    emit("nested_mg_raw", raw)
+    return rows
+
+
+if __name__ == "__main__":
+    run(int(sys.argv[1]) if len(sys.argv) > 1 else 100)

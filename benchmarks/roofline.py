@@ -1,0 +1,188 @@
+"""Roofline analysis over the dry-run artifacts (brief §Roofline).
+
+Terms per (arch x shape x mesh), all in seconds-per-step per device
+(SPMD: the partitioned HLO is the per-device program):
+
+  compute    = dot_FLOPs / peak_FLOPs          (197 TF/s bf16, v5e)
+  memory     = result_bytes * corr / HBM_bw    (819 GB/s)
+  collective = collective_bytes * corr / link  (~50 GB/s/link ICI)
+
+``corr = 0.5`` corrects for CPU float-normalization: the CPU backend
+legalizes bf16 to f32, so every byte count parsed from CPU-compiled HLO
+is ~2x the TPU bf16 figure (fp32 master params are the exception and
+make `corr` slightly optimistic for weight-gather traffic; the §Perf
+pass adds explicit bf16 cast-before-gather which makes 0.5 exact).
+
+MODEL_FLOPS = 6*N_active*T (+ attention quadratic terms) per train step,
+2*N_active*T for single-token decode; the ratio MODEL_FLOPS/dot_FLOPs
+exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs.registry import ARCH_IDS, get_config, shapes_for
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (charge the busiest axis)
+DTYPE_CORR = 0.5             # CPU f32-legalized -> TPU bf16
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "roofline.json"
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Analytic useful FLOPs per step (global, all devices)."""
+    N = cfg.n_active_params()
+    T = shape.tokens if shape.mode != "decode" else shape.global_batch
+    B, S = shape.global_batch, shape.seq_len
+    H, D = cfg.n_heads, cfg.hd
+
+    # attention quadratic term (causal => half the S^2 window)
+    if cfg.family == "ssm":
+        n_attn = 0
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.shared_attn_every, 1)
+    elif cfg.is_moe and cfg.moe_every > 1:
+        n_attn = cfg.n_layers            # two attns per group of 2
+    else:
+        n_attn = cfg.n_layers
+
+    win = min(cfg.sliding_window or S, S)
+    if shape.mode == "train":
+        flops = 6.0 * N * T
+        flops += n_attn * 6.0 * B * S * win * H * D * 0.5 * 2
+    elif shape.mode == "prefill":
+        flops = 2.0 * N * T
+        flops += n_attn * 2.0 * B * S * win * H * D * 0.5 * 2
+    else:  # decode: one token per sequence
+        flops = 2.0 * N * B
+        flops += n_attn * 4.0 * B * S * H * D  # KV-cache matmuls
+        if cfg.is_ssm:
+            di, n = cfg.d_inner, cfg.ssm_state
+            flops += cfg.n_layers * 4.0 * B * di * n
+    return flops
+
+
+def load_cells(tag: str = "baseline",
+               mesh: str = "pod16x16") -> List[Dict]:
+    cells = []
+    for f in sorted(DRYRUN_DIR.glob(f"*_{mesh}_{tag}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("ok"):
+            cells.append(rec)
+    return cells
+
+
+def corrected_collective_bytes(rec: Dict) -> float:
+    """Dtype-intent correction: the CPU backend legalizes bf16 to f32,
+    so parsed bytes are 2x the TPU figure for bf16-intended tensors.
+    Activations (rank>=3) are always bf16 (x0.5); gradient reductions
+    stay fp32 (x1.0); 2-D weight all-gathers are fp32 in the baseline
+    but bf16 when ``cast_params_once`` is set (the cast-before-gather
+    §Perf optimization)."""
+    if "collective_bytes_hi" not in rec:
+        return rec["collective_bytes_total"] * DTYPE_CORR
+    ag2d = rec["collective_bytes_ag2d"]
+    oth2d = rec["collective_bytes_other2d"]
+    hi = rec["collective_bytes_hi"]
+    patch = rec.get("cfg_patch", {})
+    ag_corr = 0.5 if (patch.get("cast_params_once")
+                      or patch.get("bf16_grads")) else 1.0
+    oth_corr = 0.5 if patch.get("bf16_grads") else 1.0
+    return ag2d * ag_corr + oth2d * oth_corr + hi * 0.5
+
+
+def analyze(tag: str = "baseline", mesh: str = "pod16x16",
+            corr: float = DTYPE_CORR) -> List[Dict]:
+    rows = []
+    for rec in load_cells(tag, mesh):
+        cfg = get_config(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        chips = rec["n_devices"]
+        t_comp = rec["dot_flops_per_device"] / PEAK_FLOPS
+        t_mem = rec["result_bytes_per_device"] * corr / HBM_BW
+        t_coll = corrected_collective_bytes(rec) / ICI_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(cfg, shape)
+        mf_dev = mf / chips
+        useful = mf_dev / max(rec["dot_flops_per_device"], 1e-9)
+        bound = max(terms.values())
+        proj_mfu = (mf_dev / PEAK_FLOPS) / max(bound, 1e-12)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": mesh,
+            "tag": tag,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops_global": mf,
+            "useful_flops_ratio": useful,
+            "proj_roofline_frac": proj_mfu,
+            "collectives": rec.get("collectives", {}),
+        })
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        body += (f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+                 f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+                 f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+                 f"{r['proj_roofline_frac']:.2f} |\n")
+    return hdr + body
+
+
+def compare_table(base: List[Dict], opt: List[Dict]) -> str:
+    """Baseline vs optimized: bound (max term) per cell + speedup."""
+    bykey = {(r["arch"], r["shape"]): r for r in opt}
+    hdr = ("| arch | shape | baseline bound s | optimized bound s | "
+           "speedup | baseline frac | optimized frac |\n"
+           "|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in sorted(base, key=lambda r: (r["arch"], r["shape"])):
+        o = bykey.get((r["arch"], r["shape"]))
+        if o is None:
+            continue
+        b_bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        o_bound = max(o["t_compute_s"], o["t_memory_s"], o["t_collective_s"])
+        body += (f"| {r['arch']} | {r['shape']} | {b_bound:.3e} | "
+                 f"{o_bound:.3e} | {b_bound / max(o_bound, 1e-12):.2f}x | "
+                 f"{r['proj_roofline_frac']:.2f} | "
+                 f"{o['proj_roofline_frac']:.2f} |\n")
+    return hdr + body
+
+
+def main() -> None:
+    tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    all_rows = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = analyze(tag, mesh)
+        all_rows.extend(rows)
+        if rows:
+            print(f"\n### mesh {mesh} ({tag})\n")
+            print(markdown_table(rows))
+    # baseline vs optimized comparison when both tags exist
+    if tag == "baseline":
+        for mesh in ("pod16x16", "pod2x16x16"):
+            opt_rows = analyze("optimized", mesh)
+            if not opt_rows:
+                continue
+            base_rows = [r for r in all_rows if r["mesh"] == mesh]
+            print(f"\n### baseline vs optimized ({mesh})\n")
+            print(compare_table(base_rows, opt_rows))
+            all_rows.extend(opt_rows)
+    OUT.write_text(json.dumps(all_rows, indent=1))
+    print(f"wrote {OUT} ({len(all_rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

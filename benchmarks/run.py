@@ -1,0 +1,56 @@
+"""Benchmark driver: one module per paper table/figure + the roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced repeat counts")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+    repeat = 10 if args.quick else 100
+    repeat_small = 5 if args.quick else 20
+
+    t0 = time.time()
+    from . import external_api, fit_models, kubeflux, nested_mg, single_level
+
+    print("#" * 72)
+    print("# paper §5.1 — single-level MA vs MG")
+    single_level.run(repeat)
+
+    print("#" * 72)
+    print("# paper §5.2 — nested MATCHGROW (Tables 1-2, Fig. 1)")
+    nested_mg.run(max(repeat // 2, 10))
+
+    print("#" * 72)
+    print("# paper §6 — regression models + CV + 2*t0 bound (Tables 4-5)")
+    fit_models.fit(max(repeat // 2, 10))
+
+    print("#" * 72)
+    print("# paper §5.3 — EC2 bursting + Fleet + static blowup (Fig. 2)")
+    external_api.run(repeat_small)
+
+    print("#" * 72)
+    print("# paper §5.4 — KubeFlux MA vs MG, 100 pods")
+    kubeflux.run(repeat_small, pods=100)
+
+    if not args.skip_roofline:
+        print("#" * 72)
+        print("# roofline over dry-run artifacts (brief §Roofline)")
+        from . import roofline
+        sys.argv = ["roofline"]
+        roofline.main()
+
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

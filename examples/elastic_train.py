@@ -1,0 +1,20 @@
+"""Elastic end-to-end training: grow mid-run, shrink, survive a node
+failure — the control plane resizing a real JAX training job.
+
+Run:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python examples/elastic_train.py
+"""
+from repro.launch.train import run_training
+
+res = run_training(
+    "llama3.2-3b", steps=24, smoke=True,
+    grow_at=6,        # MATCHGROW +4 chips -> bigger mesh, state resharded
+    shrink_at=12,     # MATCHSHRINK -2 chips
+    fail_at=18,       # node ejection (subtractive transform) + replacement
+    ckpt_dir="/tmp/repro_elastic_ckpt", ckpt_every=8,
+)
+print("\nevent log:")
+for e in res["events"]:
+    print(f"  {e.kind:8s} chips {e.chips_before} -> {e.chips_after}  {e.detail}")
+print(f"losses: {res['losses'][0]:.4f} -> {res['losses'][-1]:.4f}")

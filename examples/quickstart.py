@@ -1,0 +1,52 @@
+"""Quickstart: the paper's three capabilities in ~60 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (Jobspec, ResourceReq, SchedulerInstance,
+                        SimulatedEC2Provider, build_chain, build_cluster)
+
+# ---------------------------------------------------------------- #
+# 1. RJMS dynamism: grow and shrink a running allocation
+# ---------------------------------------------------------------- #
+cluster = build_cluster(nodes=4)
+sched = SchedulerInstance("top", cluster)
+job = sched.match_allocate(Jobspec.hpc(nodes=1, sockets=2, cores=32),
+                           jobid="train-job")
+print(f"allocated {job.n_vertices} vertices")
+
+sub = sched.match_grow(Jobspec.hpc(nodes=1, sockets=2, cores=32),
+                       "train-job")
+print(f"grew by a subgraph of size {sub.size} "
+      f"(match {sched.timings[-1].t_match*1e6:.0f}us)")
+
+victims = sched.allocations["train-job"].paths[-35:]
+sched.match_shrink("train-job", victims, remove_vertices=False)
+sched.release("train-job", victims)
+print(f"shrunk back to {len(sched.allocations['train-job'].paths)} vertices")
+
+# ---------------------------------------------------------------- #
+# 2. hierarchical scheduling: a nested instance grows through its
+#    parent (subgraph travels down as JGF and is spliced in)
+# ---------------------------------------------------------------- #
+levels = build_chain([build_cluster(nodes=4), build_cluster(nodes=1)],
+                     socket_levels=[1])     # child->parent over a socket
+leaf = levels.leaf
+leaf.match_allocate(Jobspec.hpc(nodes=1, sockets=2, cores=32), "nested")
+sub = leaf.match_grow(Jobspec.hpc(nodes=1, sockets=2, cores=32), "nested")
+rec = leaf.timings[-1]
+print(f"nested grow: +{sub.size} elements "
+      f"(comms {rec.t_comms*1e3:.2f}ms, add+update "
+      f"{rec.t_add_upd*1e3:.2f}ms)")
+levels.close()
+
+# ---------------------------------------------------------------- #
+# 3. cloud bursting: the provider picks the instances (EC2 Fleet)
+# ---------------------------------------------------------------- #
+burst = SchedulerInstance("burst", build_cluster(nodes=1),
+                          external=SimulatedEC2Provider(seed=7))
+burst.match_allocate(Jobspec.hpc(nodes=1, sockets=2, cores=32), "job")
+sub = burst.match_grow(Jobspec.fleet(5), "job")
+zones = {burst.graph.vertex(n).properties.get("zone")
+         for n in burst.graph.by_type("node")
+         if burst.graph.vertex(n).properties.get("provider") == "aws"}
+print(f"burst to {len(sub.paths())} cloud vertices across zones {zones}")

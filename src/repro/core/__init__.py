@@ -1,0 +1,21 @@
+"""Paper contribution: dynamic, hierarchical graph-based resource model."""
+from .graph import CONTAINMENT, ResourceGraph, Vertex, build_cluster, build_tpu_fleet
+from .jobspec import Jobspec, ResourceReq
+from .match import Matcher
+from .transform import (TransformKind, TransformResult, add_subgraph,
+                        remove_subgraph, update_metadata)
+from .scheduler import (Allocation, Hierarchy, MGTiming, SchedulerInstance,
+                        build_chain)
+from .external import (AWS_ZONES, TABLE3_CATALOG, ExternalProvider,
+                       InstanceType, ProvisionResult, SimulatedEC2Provider,
+                       TPUSliceProvider, fleet_catalog)
+
+__all__ = [
+    "CONTAINMENT", "ResourceGraph", "Vertex", "build_cluster",
+    "build_tpu_fleet", "Jobspec", "ResourceReq", "Matcher", "TransformKind",
+    "TransformResult", "add_subgraph", "remove_subgraph", "update_metadata",
+    "Allocation", "Hierarchy", "MGTiming", "SchedulerInstance", "build_chain",
+    "AWS_ZONES", "TABLE3_CATALOG", "ExternalProvider", "InstanceType",
+    "ProvisionResult", "SimulatedEC2Provider", "TPUSliceProvider",
+    "fleet_catalog",
+]

@@ -1,0 +1,391 @@
+"""Fully hierarchical scheduler instances with MATCHALLOCATE / MATCHGROW.
+
+Implements the paper's Algorithm 1 over the dynamic resource graph:
+
+* ``match_allocate`` (MA) — match a jobspec against the local graph and
+  allocate the resources on success.
+* ``match_grow`` (MG) — try MA locally; on success the matched resources
+  join an *existing* allocation (``RunGrow(sub, add=False)``).  On local
+  failure the request is forwarded to the parent instance via RPC; the
+  parent recurses, and at the top level falls through to the External
+  API.  The matched subgraph travels back down in JGF; every level on
+  the way splices it in with ``AddSubgraph`` + ``UpdateMetadata``
+  (``RunGrow(sub, add=True)``) — the top-down additive transform.
+* ``match_shrink`` — the subtractive transform, applied bottom-up: the
+  leaf removes the subgraph first, then notifies its parent, which
+  releases the allocation (and optionally removes vertices that only
+  existed for this child, e.g. external resources).
+
+Every MG records per-level component timings (t_match, t_comms,
+t_add_upd), which the benchmarks aggregate to reproduce the paper's
+Figures 1/3/4 and its analytical model (Section 6):
+
+    t_MG = sum_i  t_match_i + t_comms_i + t_add_upd_i
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .external import ExternalProvider, ProvisionResult
+from .graph import ResourceGraph
+from .jobspec import Jobspec
+from .match import Matcher
+from .rpc import (InProcTransport, RPCServer, SocketTransport, Transport,
+                  pack_json, unpack_json)
+from .transform import (TransformKind, TransformResult, add_subgraph,
+                        remove_subgraph, splice_jgf, update_metadata)
+
+
+class SplicedSubgraph:
+    """Lightweight view of a subgraph spliced from a JGF payload —
+    exposes the size/paths surface callers need without materializing a
+    second ResourceGraph (§Perf control-plane optimization)."""
+
+    __slots__ = ("size", "_paths")
+
+    def __init__(self, size: int, paths: List[str]):
+        self.size = size
+        self._paths = paths
+
+    def paths(self) -> List[str]:
+        return list(self._paths)
+
+
+@dataclass
+class MGTiming:
+    """Per-level component timings for one MATCHGROW (paper Section 6)."""
+
+    level: str
+    jobid: str
+    request_size: int          # |V|+|E| of the requested subgraph
+    matched_size: int = 0      # |V|+|E| of the matched subgraph
+    t_match: float = 0.0
+    t_comms: float = 0.0
+    t_add_upd: float = 0.0
+    matched_locally: bool = False
+    external: bool = False
+    ancestors_updated: int = 0
+
+    @property
+    def total(self) -> float:
+        return self.t_match + self.t_comms + self.t_add_upd
+
+
+@dataclass
+class Allocation:
+    jobid: str
+    paths: List[str] = field(default_factory=list)
+
+    @property
+    def n_vertices(self) -> int:
+        return len(self.paths)
+
+
+class SchedulerInstance:
+    """One level of the fully hierarchical scheduler.
+
+    ``parent`` is a Transport (in-proc for intranode, socket for
+    internode) or None for the top level.  ``external`` is the optional
+    ExternalAPI provider — per the paper, an external provider attached
+    to a *non-top* instance realizes "external resource specialization"
+    (resources E_i = G_i \\ G_0 managed independently of the top level).
+    """
+
+    def __init__(self, name: str, graph: ResourceGraph,
+                 parent: Optional[Transport] = None,
+                 external: Optional[ExternalProvider] = None,
+                 external_at_any_level: bool = False):
+        self.name = name
+        self.graph = graph
+        self.parent = parent
+        self.external = external
+        self.external_at_any_level = external_at_any_level
+        self.allocations: Dict[str, Allocation] = {}
+        self.timings: List[MGTiming] = []
+        self._jobids = itertools.count()
+        self._server: Optional[RPCServer] = None
+        self.external_paths: List[str] = []   # E_i bookkeeping
+
+    # ------------------------------------------------------------------ #
+    # serving (parent side)
+    # ------------------------------------------------------------------ #
+    def serve(self) -> Tuple[str, int]:
+        """Expose this instance over a loopback socket ("internode")."""
+        if self._server is None:
+            self._server = RPCServer(self.rpc_handler)
+        return self._server.address
+
+    def inproc_transport(self) -> InProcTransport:
+        """An "intranode" channel to this instance."""
+        return InProcTransport(self.rpc_handler)
+
+    def close(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            self._server = None
+
+    def rpc_handler(self, method: str, payload: bytes) -> bytes:
+        if method == "match_grow":
+            req = unpack_json(payload)
+            jobspec = Jobspec.from_dict(req["jobspec"])
+            jobid = req.get("jobid", "remote")
+            jgf = self._serve_match_grow(jobspec, jobid)
+            return jgf if jgf is not None else b""
+        if method == "release":
+            req = unpack_json(payload)
+            self.release(req["jobid"], req.get("paths"))
+            return pack_json({"ok": True})
+        raise ValueError(f"unknown RPC method {method!r}")
+
+    # ------------------------------------------------------------------ #
+    # MATCHALLOCATE
+    # ------------------------------------------------------------------ #
+    def new_jobid(self, prefix: str = "job") -> str:
+        return f"{prefix}-{self.name}-{next(self._jobids)}"
+
+    def match_allocate(self, jobspec: Jobspec,
+                       jobid: Optional[str] = None) -> Optional[Allocation]:
+        """MA: match against the local graph; allocate on success."""
+        jobid = jobid or self.new_jobid()
+        matcher = Matcher(self.graph)
+        paths = matcher.match(jobspec)
+        if paths is None:
+            return None
+        self.graph.set_allocated(paths, jobid)
+        alloc = self.allocations.setdefault(jobid, Allocation(jobid))
+        alloc.paths.extend(paths)
+        return alloc
+
+    # ------------------------------------------------------------------ #
+    # MATCHGROW (Algorithm 1)
+    # ------------------------------------------------------------------ #
+    def match_grow(self, jobspec: Jobspec, jobid: str) -> Optional[ResourceGraph]:
+        """MG: grow ``jobid``'s allocation by ``jobspec``.
+
+        Returns the added subgraph (or the locally matched subgraph) on
+        success, None on failure.  Records an MGTiming either way.
+        """
+        rec = MGTiming(level=self.name, jobid=jobid,
+                       request_size=jobspec.graph_size())
+        # 1. try locally (MATCHALLOCATE with grow semantics)
+        t0 = time.perf_counter()
+        matcher = Matcher(self.graph)
+        paths = matcher.match(jobspec)
+        rec.t_match = time.perf_counter() - t0
+        if paths is not None:
+            # RunGrow(sub, add=False): resources join the running job
+            self.graph.set_allocated(paths, jobid)
+            alloc = self.allocations.setdefault(jobid, Allocation(jobid))
+            alloc.paths.extend(paths)
+            sub = self.graph.extract(paths)
+            rec.matched_locally = True
+            rec.matched_size = sub.size
+            self.timings.append(rec)
+            return sub
+
+        # 2. forward up (or out) the hierarchy
+        tres = None
+        total_size = 0
+        if self.parent is not None:
+            t0 = time.perf_counter()
+            resp = self.parent.call("match_grow", pack_json(
+                {"jobspec": jobspec.to_dict(), "jobid": jobid}))
+            rec.t_comms = time.perf_counter() - t0
+            if resp:
+                # fused deserialize + AddSubgraph (RunGrow add=True)
+                t0 = time.perf_counter()
+                tres = splice_jgf(self.graph, json.loads(resp))
+                update_metadata(self.graph, tres, jobid=jobid)
+                rec.t_add_upd = time.perf_counter() - t0
+                total_size = tres.total_size
+        if tres is None and self.external is not None and (
+                self.parent is None or self.external_at_any_level):
+            root = self.graph.roots[0] if self.graph.roots else "/external"
+            result = self.external.provision(jobspec, root)
+            if result is not None:
+                rec.external = True
+                t0 = time.perf_counter()
+                tres = add_subgraph(self.graph, result.subgraph)
+                update_metadata(self.graph, tres, jobid=jobid)
+                rec.t_add_upd = time.perf_counter() - t0
+                total_size = result.subgraph.size
+        if tres is None:
+            self.timings.append(rec)
+            return None
+
+        rec.matched_size = total_size
+        rec.ancestors_updated = tres.ancestors_updated
+        alloc = self.allocations.setdefault(jobid, Allocation(jobid))
+        alloc.paths.extend(tres.new_paths)
+        if rec.external:
+            self.external_paths.extend(tres.new_paths)
+        self.timings.append(rec)
+        return SplicedSubgraph(total_size, tres.new_paths)
+
+    def _serve_match_grow(self, jobspec: Jobspec,
+                          jobid: str) -> Optional[bytes]:
+        """Parent-side MG service: match here (recursing upward on
+        failure), allocate to the child's job, and return the matched
+        subgraph as JGF BYTES.  A subgraph received from our own parent
+        is forwarded VERBATIM after splicing — the payload is encoded
+        exactly once at the level that matched, instead of once per
+        level (§Perf control-plane optimization beyond the paper)."""
+        rec = MGTiming(level=self.name, jobid=jobid,
+                       request_size=jobspec.graph_size())
+        t0 = time.perf_counter()
+        matcher = Matcher(self.graph)
+        paths = matcher.match(jobspec)
+        rec.t_match = time.perf_counter() - t0
+        if paths is not None:
+            self.graph.set_allocated(paths, jobid)
+            alloc = self.allocations.setdefault(jobid, Allocation(jobid))
+            alloc.paths.extend(paths)
+            sub = self.graph.extract(paths)
+            rec.matched_locally = True
+            rec.matched_size = sub.size
+            self.timings.append(rec)
+            return sub.to_jgf_bytes()
+        # recurse to our parent / external provider
+        resp = None
+        if self.parent is not None:
+            t0 = time.perf_counter()
+            resp = self.parent.call("match_grow", pack_json(
+                {"jobspec": jobspec.to_dict(), "jobid": jobid})) or None
+            rec.t_comms = time.perf_counter() - t0
+        if resp is not None:
+            t0 = time.perf_counter()
+            tres = splice_jgf(self.graph, json.loads(resp))
+            update_metadata(self.graph, tres, jobid=jobid)
+            rec.t_add_upd = time.perf_counter() - t0
+            rec.matched_size = tres.total_size
+            rec.ancestors_updated = tres.ancestors_updated
+            alloc = self.allocations.setdefault(jobid, Allocation(jobid))
+            alloc.paths.extend(tres.new_paths)
+            self.timings.append(rec)
+            return resp                       # verbatim pass-through
+        if self.external is not None:
+            root = self.graph.roots[0] if self.graph.roots else "/external"
+            result = self.external.provision(jobspec, root)
+            if result is not None:
+                rec.external = True
+                t0 = time.perf_counter()
+                tres = add_subgraph(self.graph, result.subgraph)
+                update_metadata(self.graph, tres, jobid=jobid)
+                rec.t_add_upd = time.perf_counter() - t0
+                rec.matched_size = result.subgraph.size
+                rec.ancestors_updated = tres.ancestors_updated
+                alloc = self.allocations.setdefault(jobid, Allocation(jobid))
+                alloc.paths.extend(tres.new_paths)
+                self.external_paths.extend(tres.new_paths)
+                self.timings.append(rec)
+                return result.subgraph.to_jgf_bytes()
+        self.timings.append(rec)
+        return None
+
+    # ------------------------------------------------------------------ #
+    # MATCHSHRINK (subtractive, bottom-up)
+    # ------------------------------------------------------------------ #
+    def match_shrink(self, jobid: str, paths: Sequence[str],
+                     remove_vertices: bool = True) -> TransformResult:
+        """Shrink ``jobid``'s allocation by ``paths``.
+
+        Bottom-up: remove locally first, then notify the parent so it
+        can release (the parent keeps the vertices — they return to its
+        free pool — unless they were external)."""
+        if remove_vertices:
+            res = remove_subgraph(self.graph, list(paths), jobid=jobid)
+        else:
+            self.graph.set_free(paths, jobid)
+            res = TransformResult(kind=TransformKind.SUBTRACTIVE)
+        alloc = self.allocations.get(jobid)
+        if alloc is not None:
+            doomed = set(paths)
+            alloc.paths = [p for p in alloc.paths
+                           if p not in doomed and self.graph.get(p) is not None]
+        if self.parent is not None:
+            self.parent.call("release", pack_json(
+                {"jobid": jobid, "paths": list(paths)}))
+        return res
+
+    def release(self, jobid: str, paths: Optional[Sequence[str]] = None) -> None:
+        """Release an allocation (fully, or the given subset)."""
+        alloc = self.allocations.get(jobid)
+        if alloc is None:
+            return
+        target = list(paths) if paths is not None else list(alloc.paths)
+        present = [p for p in target if p in self.graph]
+        self.graph.set_free(present, jobid)
+        # external vertices disappear when their job releases them
+        ext = [p for p in present if p in set(self.external_paths)]
+        if ext:
+            remove_subgraph(self.graph, ext, jobid=jobid)
+            eset = set(ext)
+            self.external_paths = [p for p in self.external_paths
+                                   if p not in eset]
+        if paths is None:
+            self.allocations.pop(jobid, None)
+        else:
+            doomed = set(target)
+            alloc.paths = [p for p in alloc.paths if p not in doomed]
+
+
+# ---------------------------------------------------------------------- #
+# hierarchy builder
+# ---------------------------------------------------------------------- #
+@dataclass
+class Hierarchy:
+    """A chain (or tree) of scheduler instances, leaf last."""
+
+    instances: List[SchedulerInstance]
+
+    @property
+    def top(self) -> SchedulerInstance:
+        return self.instances[0]
+
+    @property
+    def leaf(self) -> SchedulerInstance:
+        return self.instances[-1]
+
+    def close(self) -> None:
+        for inst in self.instances:
+            inst.close()
+
+    def total_timings(self) -> List[MGTiming]:
+        out: List[MGTiming] = []
+        for inst in self.instances:
+            out.extend(inst.timings)
+        return out
+
+
+def build_chain(graphs: List[ResourceGraph],
+                names: Optional[List[str]] = None,
+                socket_levels: Optional[Sequence[int]] = None,
+                external: Optional[ExternalProvider] = None) -> Hierarchy:
+    """Build a parent→child chain of instances.
+
+    ``graphs[0]`` is the top level.  ``socket_levels`` lists child indices
+    whose link *to their parent* uses the loopback socket ("internode");
+    all other links are in-process ("intranode").  ``external`` attaches
+    to the top level (the paper's default ExternalAPI placement).
+    """
+    names = names or [f"L{i}" for i in range(len(graphs))]
+    socket_levels = set(socket_levels or ())
+    instances: List[SchedulerInstance] = []
+    for i, g in enumerate(graphs):
+        parent_t: Optional[Transport] = None
+        if i > 0:
+            parent_inst = instances[i - 1]
+            if i in socket_levels:
+                addr = parent_inst.serve()
+                parent_t = SocketTransport(addr)
+            else:
+                parent_t = parent_inst.inproc_transport()
+        inst = SchedulerInstance(
+            names[i], g, parent=parent_t,
+            external=external if i == 0 else None)
+        instances.append(inst)
+    return Hierarchy(instances)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are deliberately naive (no chunking, no online softmax) so they
+serve as ground truth for the kernel allclose sweeps in
+``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: [b, h, sq, d]; k, v: [b, kvh, skv, d] (GQA: h % kvh == 0)."""
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = q.reshape(b, kvh, g, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        mask = kpos <= qpos
+        if window:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def ref_ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+            C: jax.Array,
+            initial_state: Optional[jax.Array] = None,
+            return_state: bool = False):
+    """Naive sequential SSD recurrence (the definitional semantics).
+
+    x: [b, s, H, P]; dt: [b, s, H]; A: [H] (negative);
+    B, C: [b, s, G, N].  h_t = exp(dt_t A) h_{t-1} + B_t (dt_t x_t)^T.
+    """
+    b, s, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)   # [b,s,H,N]
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    h0 = (jnp.zeros((b, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                       # [b,H,P], [b,H], [b,H,N]
+        da = jnp.exp(dtt * A[None, :])              # [b,H]
+        h = h * da[:, :, None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt, Bt, dtt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)                    # [b,s,H,P]
+    if return_state:
+        return y.astype(x.dtype), hT
+    return y.astype(x.dtype)

@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+* proof that the distribution config is coherent (compile succeeds),
+* ``compiled.memory_analysis()``  — bytes per device,
+* ``compiled.cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+* the collective-bytes tally parsed from the partitioned HLO text.
+
+Results are written as JSON under ``experiments/dryrun/`` so the
+roofline/benchmark layers never need to re-compile.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+      --shape train_4k [--multi-pod] [--all]
+"""
+__doc__ = DOC
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ARCH_IDS, get_config, shapes_for
+from ..models.config import SHAPES, ArchConfig, ShapeConfig
+from ..models.model import Model, make_model
+from ..parallel.sharding import Rules, ShardingCtx
+from .hloparse import analyze
+from .mesh import make_production_mesh
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+# ---------------------------------------------------------------------- #
+def build_cell(arch_id: str, shape_name: str, mesh,
+               rules: Optional[Rules] = None,
+               cfg_override: Optional[ArchConfig] = None,
+               cfg_patch: Optional[Dict[str, Any]] = None):
+    """Return (jitted_fn, arg_shapes) for one cell, with shardings set."""
+    cfg = cfg_override or get_config(arch_id)
+    if cfg_patch:
+        cfg = dataclasses.replace(cfg, **cfg_patch)
+    shape = SHAPES[shape_name]
+    if cfg.name.startswith("zamba2") and shape.name == "long_500k":
+        # shared attention block runs sliding-window at 512K context
+        cfg = dataclasses.replace(cfg, sliding_window=4096)
+    rules = rules or Rules()
+    # batch=1 cells (long_500k) cannot shard the batch dim: drop axes the
+    # global batch does not divide (the model/seq sharding still spreads
+    # state and cache over the mesh).
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = rules.table.get("batch") or ()
+    if isinstance(batch_axes, str):
+        batch_axes = (batch_axes,)
+    keep = []
+    prod = 1
+    for a in batch_axes:
+        k = axis_size.get(a, 1)
+        if shape.global_batch % (prod * k) == 0:
+            keep.append(a)
+            prod *= k
+    if tuple(keep) != tuple(batch_axes):
+        rules = rules.override(batch=tuple(keep) if keep else None)
+    ctx = ShardingCtx(rules, mesh)
+    model = make_model(cfg, ctx)
+
+    def with_sh(tree_shapes, tree_shard):
+        return jax.tree_util.tree_map(
+            lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+            tree_shapes, tree_shard)
+
+    p_shapes = with_sh(model.param_shapes(), model.param_shardings())
+    in_shapes = with_sh(model.input_specs(shape),
+                        model.input_shardings(shape))
+
+    if shape.mode == "train":
+        o_shapes = with_sh(model.opt_shapes(), model.opt_shardings())
+        fn = jax.jit(model.train_step,
+                     out_shardings=(model.param_shardings(),
+                                    model.opt_shardings(), None),
+                     donate_argnums=(0, 1))
+        args = (p_shapes, o_shapes, in_shapes)
+    elif shape.mode == "prefill":
+        fn = jax.jit(model.prefill_step,
+                     out_shardings=(None, model.cache_shardings()))
+        args = (p_shapes, in_shapes)
+    else:  # decode
+        c_shapes = with_sh(model.cache_specs(shape), model.cache_shardings())
+        fn = jax.jit(model.serve_step,
+                     out_shardings=(None, model.cache_shardings()),
+                     donate_argnums=(1,))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (p_shapes, c_shapes, in_shapes, pos)
+    return cfg, model, fn, args
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
+             rules: Optional[Rules] = None, tag: str = "baseline",
+             verbose: bool = True,
+             cfg_patch: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg, model, fn, args = build_cell(arch_id, shape_name, mesh, rules,
+                                      cfg_patch=cfg_patch)
+    rec: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "mode": SHAPES[shape_name].mode, "n_devices": mesh.size,
+    }
+    try:
+        with mesh:
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t0
+        ca = compiled.cost_analysis() or {}
+        rec["flops"] = float(ca.get("flops", 0.0))
+        rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        rec["utilization_keys"] = sorted(k for k in ca if "utilization" not in k)[:8]
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: getattr(ma, k) for k in dir(ma)
+                if not k.startswith("_")
+                and isinstance(getattr(ma, k, None), (int, float))}
+        except Exception as e:  # noqa: BLE001
+            rec["memory_analysis"] = {"error": str(e)}
+        hlo = compiled.as_text()
+        tally = analyze(hlo)
+        rec["collectives"] = dict(tally.collective_bytes)
+        rec["collective_counts"] = dict(tally.collective_counts)
+        rec["collective_bytes_total"] = tally.total_collective_bytes
+        rec["collective_bytes_ag2d"] = tally.collective_bytes_ag2d
+        rec["collective_bytes_other2d"] = tally.collective_bytes_other2d
+        rec["collective_bytes_hi"] = tally.collective_bytes_hi
+        rec["dot_flops_per_device"] = tally.dot_flops
+        rec["result_bytes_per_device"] = tally.result_bytes
+        rec["trip_counts"] = dict(tally.trip_counts)
+        rec["cfg_patch"] = dict(cfg_patch or {})
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{arch_id}_{shape_name}_{mesh_name}_{tag}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    if verbose:
+        status = "OK " if rec["ok"] else "FAIL"
+        extra = (f"dotflops/dev={rec.get('dot_flops_per_device', 0):.3e} "
+                 f"coll/dev={rec.get('collective_bytes_total', 0):.3e}B "
+                 f"compile={rec.get('compile_s', 0):.1f}s"
+                 if rec["ok"] else rec.get("error", ""))
+        print(f"[{status}] {arch_id:28s} {shape_name:12s} {mesh_name:10s} {extra}",
+              flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable (arch x shape) cell")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the per-arch §Perf patches (registry."
+                         "PERF_PATCHES) and tag records 'optimized'")
+    args = ap.parse_args()
+    if args.optimized and args.tag == "baseline":
+        args.tag = "optimized"
+
+    cells = []
+    if args.all:
+        for aid in ARCH_IDS:
+            for shape in shapes_for(get_config(aid)):
+                cells.append((aid, shape.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    from ..configs.registry import perf_patch
+    failures = 0
+    for aid, sname in cells:
+        patch = perf_patch(aid) if args.optimized else None
+        rec = run_cell(aid, sname, multi_pod=args.multi_pod, tag=args.tag,
+                       cfg_patch=patch)
+        failures += 0 if rec["ok"] else 1
+    print(f"\n{len(cells) - failures}/{len(cells)} cells compiled", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,232 @@
+"""Loop-aware analysis of partitioned HLO text.
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE, but a scan over
+L layers executes it L times; the same applies to collectives that
+appear inside the loop body.  This module segments the optimized HLO
+text into computations, discovers each ``while`` op's trip count from
+its condition computation, and tallies
+
+* per-op-type collective bytes (result shapes, trip-count weighted),
+* matmul FLOPs from ``dot`` ops (2 x result x contraction, trip-count
+  weighted) — the dominant FLOP source; elementwise ops are ignored,
+* a memory-traffic proxy: result bytes of materialized (top-level) ops,
+  trip-count weighted.
+
+dtype note: the CPU backend float-normalizes bf16 to f32, so byte
+counts parsed here are ~2x the TPU bf16 numbers; the roofline layer
+applies a documented correction.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+                "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*)?\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z]\d*[a-z0-9]*\[[\d,]*\]\S*)\s+([\w\-]+)\(")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w.\-]+),?\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(tok: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(tok):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(tok: str) -> int:
+    """Elements of the FIRST shape in the token (for dot results)."""
+    m = _SHAPE_RE.search(tok)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    shape_tok: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)  # (cond, body)
+    calls: List[str] = field(default_factory=list)               # called comps
+
+    def max_const(self) -> int:
+        best = 1
+        for op in self.ops:
+            for m in _CONST_RE.finditer(op.line):
+                best = max(best, int(m.group(1)))
+        return best
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("->" in line or line.rstrip().endswith("{")) and "=" not in line.split("(")[0]:
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = Op(m.group(1), m.group(3), m.group(2), line)
+        cur.ops.append(op)
+        if op.kind == "while":
+            wm = _WHILE_ATTR_RE.search(line)
+            if wm:
+                cur.whiles.append((wm.group(1), wm.group(2)))
+        for cm in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)", line):
+            cur.calls.append(cm.group(1))
+    return comps
+
+
+def find_entry(comps: Dict[str, Computation], hlo: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m:
+        return m.group(1)
+    # fallback: the computation nobody references
+    referenced = set()
+    for c in comps.values():
+        referenced.update(b for _, b in c.whiles)
+        referenced.update(cond for cond, _ in c.whiles)
+        referenced.update(c.calls)
+    for name in comps:
+        if name not in referenced:
+            return name
+    return next(iter(comps))
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    """2 x |result| x contraction for a dot op."""
+    res = shape_elems(op.shape_tok)
+    # contraction size: product of lhs contracting dims
+    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    margs = re.findall(r"\(%?([\w.\-]+)(?:,\s*%?([\w.\-]+))?\)", op.line)
+    contr = 1
+    if mdims:
+        args = re.search(r"\b" + re.escape(op.kind) + r"\(([^)]*)\)", op.line)
+        if args:
+            first = args.group(1).split(",")[0].strip().lstrip("%")
+            lhs_tok = shapes.get(first, "")
+            sm = _SHAPE_RE.search(lhs_tok)
+            if sm and sm.group(2):
+                dims = [int(d) for d in sm.group(2).split(",")]
+                for idx in (mdims.group(1).split(",") if mdims.group(1) else []):
+                    i = int(idx)
+                    if i < len(dims):
+                        contr *= dims[i]
+    return 2.0 * res * contr
+
+
+def _max_rank(tok: str) -> int:
+    best = 0
+    for m in _SHAPE_RE.finditer(tok):
+        dims = m.group(2)
+        best = max(best, len(dims.split(",")) if dims else 0)
+    return best
+
+
+@dataclass
+class Tally:
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    # bucketed by result rank: <=2 -> parameter tensors (FSDP gathers /
+    # grad reductions), >=3 -> activations.  Drives the dtype-intent
+    # correction in the roofline (CPU legalizes bf16 to f32).
+    collective_bytes_ag2d: float = 0.0    # weight all-gathers
+    collective_bytes_other2d: float = 0.0  # grad all-reduce etc (fp32)
+    collective_bytes_hi: float = 0.0       # activations
+    dot_flops: float = 0.0
+    result_bytes: float = 0.0           # memory-traffic proxy
+    trip_counts: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(hlo: str) -> Tally:
+    comps = parse_computations(hlo)
+    entry = find_entry(comps, hlo)
+    tally = Tally()
+
+    # shape env per computation for dot contraction lookup
+    shapes: Dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            shapes[op.name] = op.shape_tok
+
+    def visit(name: str, mult: float, depth: int = 0) -> None:
+        if name not in comps or depth > 12:
+            return
+        c = comps[name]
+        body_names = {b for _, b in c.whiles}
+        cond_names = {cd for cd, _ in c.whiles}
+        for op in c.ops:
+            if op.kind in COLLECTIVES:
+                b = shape_bytes(op.shape_tok) * mult
+                tally.collective_bytes[op.kind] = \
+                    tally.collective_bytes.get(op.kind, 0.0) + b
+                tally.collective_counts[op.kind] = \
+                    tally.collective_counts.get(op.kind, 0.0) + mult
+                if _max_rank(op.shape_tok) <= 2:
+                    if op.kind == "all-gather":
+                        tally.collective_bytes_ag2d += b
+                    else:
+                        tally.collective_bytes_other2d += b
+                else:
+                    tally.collective_bytes_hi += b
+            elif op.kind == "dot":
+                tally.dot_flops += _dot_flops(op, shapes) * mult
+            if op.kind not in ("parameter", "constant", "get-tuple-element",
+                               "tuple", "bitcast"):
+                tally.result_bytes += shape_bytes(op.shape_tok) * mult
+        for cond, body in c.whiles:
+            trips = comps[cond].max_const() if cond in comps else 1
+            tally.trip_counts[body] = trips
+            visit(body, mult * max(trips, 1), depth + 1)
+        # descend into fusions/calls once (their ops execute with mult)
+        for callee in c.calls:
+            if callee in comps and callee not in body_names \
+                    and callee not in cond_names:
+                cal = comps[callee]
+                for op in cal.ops:
+                    if op.kind == "dot":
+                        tally.dot_flops += _dot_flops(op, shapes) * mult
+
+    visit(entry, 1.0)
+    return tally

@@ -1,0 +1,329 @@
+"""Model building blocks: norms, rotary embeddings, GQA attention, MLPs.
+
+Pure-functional JAX.  Every layer takes a ``ShardingCtx`` so activation
+sharding constraints are expressed with logical axis names (see
+``repro.parallel.sharding``); with ``mesh=None`` they are no-ops and the
+same code runs in CPU smoke tests.
+
+Attention uses the XLA einsum path by default (the Pallas flash kernel
+in ``repro.kernels`` is validated separately in interpret mode and can be
+enabled with ``use_pallas=True`` on real TPU runtimes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import ShardingCtx, constrain
+from .config import ArchConfig
+
+
+# ---------------------------------------------------------------------- #
+# param specs
+# ---------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis names, len == ndim
+    init: str = "normal"                 # normal | zeros | ones | small
+    dtype: str = "float32"
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        dt = jnp.dtype(self.dtype)
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dt)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dt)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+        if self.init == "small":
+            scale *= 0.1
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(dt)
+
+
+def materialize_tree(specs, key: jax.Array):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [l.materialize(k) for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def tree_shardings(specs, ctx: ShardingCtx):
+    """Map a ParamSpec tree to NamedShardings (or specs if mesh absent)."""
+    return jax.tree_util.tree_map(
+        lambda s: ctx.sharding(*s.axes) if ctx.mesh is not None
+        else ctx.spec(*s.axes),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_shapes(specs):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------- #
+# norms
+# ---------------------------------------------------------------------- #
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------- #
+# rotary embeddings (RoPE and M-RoPE)
+# ---------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: Optional[Tuple[int, ...]] = None) -> jax.Array:
+    """x: [b, s, h, d]; positions: [b, s] (RoPE) or [3, b, s] (M-RoPE).
+
+    M-RoPE (Qwen2-VL): the head_dim/2 frequency slots are split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  With text-only positions (all three equal) it reduces to
+    standard RoPE.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [d/2]
+    if mrope_sections is not None:
+        pos3 = positions.astype(jnp.float32)           # [3, b, s]
+        secs = []
+        off = 0
+        for i, n in enumerate(mrope_sections):
+            secs.append(pos3[i][..., None] * freqs[off:off + n])
+            off += n
+        angles = jnp.concatenate(secs, axis=-1)        # [b, s, d/2]
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs  # [b, s, d/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_sections_for(head_dim: int) -> Tuple[int, int, int]:
+    """Qwen2-VL style (t, h, w) split of the d/2 frequency slots."""
+    half = head_dim // 2
+    t = half // 2
+    h = (half - t) // 2
+    w = half - t - h
+    return (t, h, w)
+
+
+# ---------------------------------------------------------------------- #
+# attention (GQA, causal, optional sliding window)
+# ---------------------------------------------------------------------- #
+def attn_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    """QKV/O projection specs.  Attention projections are FSDP-2D sharded
+    on the embed dim (head counts 24/40/48 do not divide the model axis)."""
+    e, h, kvh, d = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": ParamSpec((e, h * d), ("fsdp2d", None)),
+        "wk": ParamSpec((e, kvh * d), ("fsdp2d", None)),
+        "wv": ParamSpec((e, kvh * d), ("fsdp2d", None)),
+        "wo": ParamSpec((h * d, e), ("fsdp2d", None)),
+        "norm": ParamSpec((e,), (None,), init="zeros"),
+    }
+
+
+def stack_specs(specs: Dict, n: int) -> Dict:
+    """Prepend a stacked-layer axis to every ParamSpec in a tree."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _causal_mask(sq: int, skv: int, q_offset, window: int = 0) -> jax.Array:
+    """[sq, skv] boolean mask.  q_offset = absolute position of q row 0."""
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window:
+        m = jnp.logical_and(m, kpos > qpos - window)
+    return m
+
+
+def attention(x: jax.Array, p: Dict, cfg: ArchConfig, ctx: ShardingCtx,
+              positions: jax.Array,
+              cache: Optional[Dict] = None,
+              cache_index: Optional[jax.Array] = None,
+              window: int = 0,
+              want_cache: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """GQA attention.
+
+    Train/prefill: ``x`` is [b, s, e] (sequence-sharded over 'model'),
+    cache is None (prefill returns the fresh cache).
+    Decode: ``x`` is [b, 1, e]; ``cache`` holds k/v [b, S, kvh, d]
+    sequence-sharded over 'model'; ``cache_index`` is the write position.
+    """
+    b, s, e = x.shape
+    h, kvh, d = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    window = window or cfg.sliding_window
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    cdt = xn.dtype
+
+    q = (xn @ p["wq"].astype(cdt)).reshape(b, s, h, d)
+    k = (xn @ p["wk"].astype(cdt)).reshape(b, s, kvh, d)
+    v = (xn @ p["wv"].astype(cdt)).reshape(b, s, kvh, d)
+
+    msecs = mrope_sections_for(d) if cfg.rope == "mrope" else None
+    if cfg.rope != "none":
+        q = apply_rope(q, positions, cfg.rope_theta, msecs)
+        k = apply_rope(k, positions, cfg.rope_theta, msecs)
+
+    new_cache = None
+    if cache is not None:                      # decode: append to cache
+        ck, cv = cache["k"], cache["v"]
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        ck = constrain(ck, ctx, "batch", "kv_seq", "kv_heads", "head_dim")
+        cv = constrain(cv, ctx, "batch", "kv_seq", "kv_heads", "head_dim")
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(cdt), cv.astype(cdt)
+        skv = k.shape[1]
+        kpos = jnp.arange(skv)
+        ppos = positions if positions.ndim == 2 else positions[0]  # mrope: t
+        mask = kpos[None, :] <= ppos[:, :1]                  # [b, skv]
+        if window:
+            mask = jnp.logical_and(mask, kpos[None, :] > ppos[:, :1] - window)
+        mask = mask[:, None, None, None, :]                  # [b,1,1,1,skv]
+    else:
+        skv = s
+        mask = _causal_mask(s, skv, 0, window)[None, None, None, :, :]
+        if want_cache:
+            kc = constrain(k, ctx, "batch", "kv_seq", "kv_heads", "head_dim")
+            vc = constrain(v, ctx, "batch", "kv_seq", "kv_heads", "head_dim")
+            new_cache = {"k": kc, "v": vc}
+
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, d)
+    # scores: [b, kvh, g, sq, skv]
+    scores = jnp.einsum("bsknd,btkd->bknst", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(d)
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    o = jnp.einsum("bknst,btkd->bsknd", w, v).reshape(b, s, h * d)
+    out = o @ p["wo"].astype(cdt)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------- #
+# MLPs
+# ---------------------------------------------------------------------- #
+def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
+    e, f = cfg.d_model, (d_ff or cfg.d_ff)
+    specs = {
+        "w_up": ParamSpec((e, f), ("fsdp", "tp")),
+        "w_down": ParamSpec((f, e), ("tp", "fsdp")),
+        "norm": ParamSpec((e,), (None,), init="zeros"),
+    }
+    if cfg.mlp_act == "swiglu":
+        specs["w_gate"] = ParamSpec((e, f), ("fsdp", "tp"))
+    return specs
+
+
+def mlp(x: jax.Array, p: Dict, cfg: ArchConfig, ctx: ShardingCtx,
+        normed: bool = False) -> jax.Array:
+    cdt = x.dtype
+    xn = x if normed else rmsnorm(x, p["norm"], cfg.norm_eps)
+    up = xn @ p["w_up"].astype(cdt)
+    if cfg.mlp_seq_sharded:
+        # §Perf: keep the [b, s, f] intermediate sequence-sharded so the
+        # (small) weights gather instead of the (large) activations
+        up = constrain(up, ctx, "batch", "seq", None)
+    if cfg.mlp_act == "swiglu":
+        gate = xn @ p["w_gate"].astype(cdt)
+        if cfg.mlp_seq_sharded:
+            gate = constrain(gate, ctx, "batch", "seq", None)
+        hmid = jax.nn.silu(gate) * up
+    elif cfg.mlp_act == "relu2":
+        r = jax.nn.relu(up)
+        hmid = r * r
+    else:
+        hmid = jax.nn.gelu(up)
+    out = hmid @ p["w_down"].astype(cdt)
+    if cfg.mlp_seq_sharded:
+        out = constrain(out, ctx, "batch", "seq", "embed")
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# embeddings / head
+# ---------------------------------------------------------------------- #
+def embed_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    v, e = cfg.vocab, cfg.d_model
+    vocab_ax = "vocab" if v % 256 == 0 else None   # mamba2's 50280 is odd
+    emb_e_ax = "fsdp" if vocab_ax else "fsdp2d"
+    specs = {
+        "embedding": ParamSpec((v, e), (vocab_ax, emb_e_ax), init="small"),
+        "final_norm": ParamSpec((e,), (None,), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((e, v), (emb_e_ax, vocab_ax), init="small")
+    return specs
+
+
+def embed_tokens(tokens: jax.Array, p: Dict, cfg: ArchConfig,
+                 ctx: ShardingCtx) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    return constrain(x, ctx, "batch", "seq", "embed")
+
+
+def lm_logits(x: jax.Array, p: Dict, cfg: ArchConfig, ctx: ShardingCtx) -> jax.Array:
+    xn = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    head = p["embedding"].T if cfg.tie_embeddings else p["lm_head"]
+    if cfg.seq_sharded_loss:
+        # §Perf: keep the token dim sequence-sharded and gather the head
+        # fully (one ~0.5-1GB bf16 all-gather per step) instead of the
+        # per-step partial-sum all-reduce cascade over [b, s, v].
+        cdt = jnp.dtype(cfg.dtype)
+        logits = jax.lax.dot_general(
+            xn.astype(cdt), head.astype(cdt),
+            (((xn.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return constrain(logits, ctx, "batch", "seq", None)
+    if cfg.cast_params_once:
+        # §Perf: bf16 inputs with fp32 accumulation — halves the head
+        # all-gather and the logits buffer without hurting the softmax
+        # numerics (the reduction stays fp32).
+        cdt = jnp.dtype(cfg.dtype)
+        logits = jax.lax.dot_general(
+            xn.astype(cdt), head.astype(cdt),
+            (((xn.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        logits = xn.astype(jnp.float32) @ head.astype(jnp.float32)
+    return constrain(logits, ctx, "batch", "seq", "vocab")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  onehot: bool = False) -> jax.Array:
+    """Mean token cross-entropy; logits [b, s, v] fp32, labels [b, s].
+
+    ``onehot=True`` (§Perf): the gold logit is reduced through a fused
+    iota==label select instead of take_along_axis — the gather lowers to
+    s32 all-gathers + all-to-alls when vocab is sharded; the select
+    partitions cleanly along the sharded vocab dim."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    if onehot:
+        v = logits.shape[-1]
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        hit = (iota == labels[..., None])
+        gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    else:
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,2 @@
+from .adamw import OptConfig, OptState, apply_updates, init_opt_state, opt_state_specs
+from .schedule import warmup_cosine

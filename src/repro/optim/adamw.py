@@ -1,0 +1,157 @@
+"""Optimizers: AdamW and Adafactor, sharded by construction.
+
+Optimizer states mirror the parameter pytree, so they inherit the 2D
+(FSDP x TP) parameter sharding — no separate Zero partitioning pass is
+needed.  Adafactor (factored second moments) is used for the 400B MoE
+(llama4-maverick), where full AdamW moments would not fit a single v5e
+pod's HBM; this is recorded in DESIGN.md as a deliberate distributed-
+optimization choice.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .schedule import warmup_cosine
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any            # first moment (AdamW) or () (Adafactor)
+    nu: Any            # second moment; Adafactor: dict(row=, col=) per leaf
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"        # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+
+
+# ---------------------------------------------------------------------- #
+def _factored(shape: Tuple[int, ...]) -> bool:
+    return len(shape) >= 2
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> OptState:
+    if cfg.kind == "adafactor":
+        def nu_leaf(p):
+            if _factored(p.shape):
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+        return OptState(step=jnp.zeros((), jnp.int32), mu=(),
+                        nu=jax.tree_util.tree_map(nu_leaf, params))
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree_util.tree_map(zeros, params),
+                    nu=jax.tree_util.tree_map(zeros, params))
+
+
+def opt_state_specs(param_specs: Any, cfg: OptConfig):
+    """ParamSpec tree for the optimizer state (mirrors param sharding)."""
+    from ..models.layers import ParamSpec
+
+    def mirror(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, s.axes, init="zeros", dtype="float32")
+
+    is_ps = lambda x: isinstance(x, ParamSpec)  # noqa: E731
+    if cfg.kind == "adafactor":
+        def nu_leaf(s: ParamSpec):
+            if _factored(s.shape):
+                return {"row": ParamSpec(s.shape[:-1], s.axes[:-1], "zeros",
+                                         "float32"),
+                        "col": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                         s.axes[:-2] + s.axes[-1:], "zeros",
+                                         "float32")}
+            return {"full": mirror(s)}
+        return OptState(
+            step=ParamSpec((), (), "zeros", "int32"), mu=(),
+            nu=jax.tree_util.tree_map(nu_leaf, param_specs, is_leaf=is_ps))
+    return OptState(
+        step=ParamSpec((), (), "zeros", "int32"),
+        mu=jax.tree_util.tree_map(mirror, param_specs, is_leaf=is_ps),
+        nu=jax.tree_util.tree_map(mirror, param_specs, is_leaf=is_ps))
+
+
+# ---------------------------------------------------------------------- #
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(params: Any, grads: Any, state: OptState,
+                  cfg: OptConfig) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    lr = warmup_cosine(step, cfg.lr, cfg.warmup, cfg.total_steps)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads)
+
+    if cfg.kind == "adafactor":
+        eps2 = 1e-30
+        decay = 1.0 - jnp.power(step.astype(jnp.float32) + 1.0, -0.8)
+
+        def upd(p, g, nu):
+            g2 = g * g + eps2
+            if _factored(p.shape):
+                row = decay * nu["row"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                col = decay * nu["col"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(row, axis=-1, keepdims=True)
+                vhat = (row / jnp.maximum(rmean, eps2))[..., None] * col[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps2))
+                new_nu = {"row": row, "col": col}
+            else:
+                full = decay * nu["full"] + (1 - decay) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(full, eps2))
+                new_nu = {"full": full}
+            # update clipping (Adafactor RMS rule)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps2)
+            u = u / jnp.maximum(1.0, rms)
+            newp = (p.astype(jnp.float32) * (1 - lr * cfg.weight_decay
+                                             * float(p.ndim >= 2))
+                    - lr * u)
+            return newp.astype(p.dtype), new_nu
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_nu = tdef.flatten_up_to(state.nu)
+        out = [upd(p, g, nu) for p, g, nu in zip(flat_p, flat_g, flat_nu)]
+        newp = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        newnu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        return newp, OptState(step=step, mu=(), nu=newnu)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - jnp.power(b1, step.astype(jnp.float32))
+    bc2 = 1 - jnp.power(b2, step.astype(jnp.float32))
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) * jax.lax.rsqrt(v / bc2 + cfg.eps * cfg.eps)
+        newp = (p.astype(jnp.float32)
+                * (1 - lr * cfg.weight_decay * float(p.ndim >= 2))
+                - lr * u)
+        return newp.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_v = jax.tree_util.tree_leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    newp = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    newm = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    newv = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return newp, OptState(step=step, mu=newm, nu=newv)

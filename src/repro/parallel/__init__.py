@@ -1,0 +1,2 @@
+from .sharding import (DEFAULT_RULES, Rules, ShardingCtx, constrain,
+                       divisible)

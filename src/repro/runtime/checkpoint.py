@@ -1,0 +1,113 @@
+"""Topology-independent sharded checkpointing.
+
+Checkpoints are keyed by the parameter tree structure, NOT by the mesh:
+each leaf is saved as a host numpy array plus a manifest, so a restore
+can re-shard onto any mesh (elastic resize, post-failure shrink, or a
+different pod count).  Saves can run asynchronously (background thread)
+so the training loop is not blocked — the paper's dynamism story needs
+cheap frequent checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._async_thread: Optional[threading.Thread] = None
+
+    # ---------------------------------------------------------------- #
+    def save(self, step: int, state: Dict[str, Any],
+             blocking: bool = True) -> Path:
+        """``state`` is a dict of pytrees (e.g. params=, opt_state=)."""
+        host_state = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), state)
+        if blocking:
+            return self._write(step, host_state)
+        self.wait()
+        self._async_thread = threading.Thread(
+            target=self._write, args=(step, host_state), daemon=True)
+        self._async_thread.start()
+        return self.dir / f"step_{step:08d}"
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _write(self, step: int, host_state: Dict[str, Any]) -> Path:
+        out = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f".tmp_step_{step:08d}_{time.time_ns()}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        manifest: Dict[str, Any] = {"step": step, "trees": {}}
+        for name, tree in host_state.items():
+            leaves, treedef = _flatten(tree)
+            manifest["trees"][name] = {
+                "n_leaves": len(leaves),
+                "treedef": str(treedef),
+            }
+            np.savez(tmp / f"{name}.npz",
+                     **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if out.exists():  # re-save of the same step: replace
+            for f in out.iterdir():
+                f.unlink()
+            out.rmdir()
+        tmp.rename(out)  # atomic publish
+        self._gc()
+        return out
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_*"))
+        for old in ckpts[:-self.keep]:
+            for f in old.iterdir():
+                f.unlink()
+            old.rmdir()
+
+    # ---------------------------------------------------------------- #
+    def latest_step(self) -> Optional[int]:
+        ckpts = sorted(self.dir.glob("step_*"))
+        if not ckpts:
+            return None
+        return int(ckpts[-1].name.split("_")[1])
+
+    def restore(self, like: Dict[str, Any],
+                shardings: Optional[Dict[str, Any]] = None,
+                step: Optional[int] = None) -> Tuple[int, Dict[str, Any]]:
+        """Restore onto the CURRENT mesh: ``like`` provides pytree
+        structure; ``shardings`` (same structure) re-shards each leaf —
+        this is what makes checkpoints topology-independent."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        src = self.dir / f"step_{step:08d}"
+        out: Dict[str, Any] = {}
+        for name, tree in like.items():
+            leaves, treedef = _flatten(tree)
+            data = np.load(src / f"{name}.npz")
+            new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+            if shardings is not None and name in shardings:
+                sh_leaves = jax.tree_util.tree_leaves(
+                    shardings[name],
+                    is_leaf=lambda x: x is None or hasattr(x, "spec"))
+                new_leaves = [
+                    jax.device_put(l, sh) if sh is not None else l
+                    for l, sh in zip(new_leaves, sh_leaves)]
+            out[name] = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        return step, out

@@ -1,0 +1,197 @@
+"""ElasticRuntime: scheduler allocations bound to JAX meshes.
+
+This is where the paper's control plane meets the data plane.  A
+training job holds a resource allocation (a subgraph of the hierarchical
+scheduler's resource graph).  Elasticity events map as:
+
+* **grow**   — MATCHGROW via the scheduler hierarchy (bursting through
+  the External API if the local fleet is exhausted), then re-bind the
+  job to a larger mesh and re-shard the training state onto it;
+* **shrink** — MATCHSHRINK (bottom-up subtractive transform), re-bind
+  to a smaller mesh;
+* **failure** — subtractive transform ejecting the failed node, then a
+  MATCHGROW for a replacement (spare pool first, then external), then
+  restore from the last checkpoint if the in-memory state was lost.
+
+The data plane is re-jitted against the new mesh; parameters/optimizer
+move via ``jax.device_put`` with the new NamedShardings (topology-
+independent layout keyed by logical axes).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.graph import ResourceGraph
+from ..core.jobspec import Jobspec
+from ..core.scheduler import SchedulerInstance
+from ..models.config import ArchConfig, ShapeConfig
+from ..models.model import Model, make_model
+from ..optim.adamw import OptConfig
+from ..parallel.sharding import Rules, ShardingCtx
+
+
+@dataclass
+class ElasticEvent:
+    kind: str            # grow | shrink | eject | rebind | restore
+    t: float
+    chips_before: int
+    chips_after: int
+    detail: str = ""
+
+
+class ElasticRuntime:
+    """Bind a scheduler allocation to a mesh; survive resizes."""
+
+    def __init__(self, scheduler: SchedulerInstance, cfg: ArchConfig,
+                 shape: ShapeConfig, jobid: str = "train-job",
+                 model_axis: int = 1, chip_type: str = "core",
+                 rules: Optional[Rules] = None,
+                 opt: Optional[OptConfig] = None):
+        self.scheduler = scheduler
+        self.cfg = cfg
+        self.shape = shape
+        self.jobid = jobid
+        self.model_axis = model_axis
+        self.chip_type = chip_type
+        self.rules = rules or Rules()
+        self.opt = opt
+        self.events: List[ElasticEvent] = []
+        self.mesh = None
+        self.model: Optional[Model] = None
+        self._train_step = None
+        self.params = None
+        self.opt_state = None
+
+    # ---------------------------------------------------------------- #
+    def chips_allocated(self) -> int:
+        alloc = self.scheduler.allocations.get(self.jobid)
+        if alloc is None:
+            return 0
+        g = self.scheduler.graph
+        return sum(1 for p in alloc.paths
+                   if p in g and g.vertex(p).type == self.chip_type)
+
+    def _usable_devices(self) -> int:
+        """Devices this process may bind (min of allocation and local)."""
+        chips = self.chips_allocated()
+        avail = len(jax.devices())
+        usable = min(chips, avail)
+        # keep divisibility by the model axis and the batch
+        usable -= usable % self.model_axis
+        while usable > self.model_axis and \
+                self.shape.global_batch % (usable // self.model_axis):
+            usable -= self.model_axis
+        return max(usable, self.model_axis)
+
+    # ---------------------------------------------------------------- #
+    def bind(self, key: Optional[jax.Array] = None) -> None:
+        """(Re)build mesh + model + jitted step for current allocation,
+        re-sharding existing state (or initializing it with ``key``)."""
+        from ..launch.mesh import make_mesh_for
+        n = self._usable_devices()
+        before = 0 if self.mesh is None else self.mesh.size
+        self.mesh = make_mesh_for(n, self.model_axis)
+        ctx = ShardingCtx(self.rules, self.mesh)
+        self.model = make_model(self.cfg, ctx, self.opt)
+        psh = self.model.param_shardings()
+        osh = self.model.opt_shardings()
+        if self.params is None:
+            if key is None:
+                key = jax.random.key(0)
+            with self.mesh:
+                self.params = jax.jit(
+                    self.model.init_params, out_shardings=psh)(key)
+                self.opt_state = jax.jit(
+                    self.model.init_opt, out_shardings=osh)(self.params)
+        else:
+            # re-shard existing state onto the new mesh (elastic move)
+            self.params = jax.device_put(self.params, psh)
+            self.opt_state = jax.device_put(self.opt_state, osh)
+        self._train_step = jax.jit(
+            self.model.train_step,
+            out_shardings=(psh, osh, None),
+            donate_argnums=(0, 1))
+        self.events.append(ElasticEvent(
+            "rebind", time.time(), before, self.mesh.size,
+            f"devices={self.mesh.size} model_axis={self.model_axis}"))
+
+    # ---------------------------------------------------------------- #
+    def allocate(self, chips: int) -> bool:
+        from ..core.jobspec import ResourceReq
+        js = Jobspec(resources=[ResourceReq(self.chip_type, chips)])
+        alloc = self.scheduler.match_allocate(js, jobid=self.jobid)
+        return alloc is not None
+
+    def grow(self, chips: int) -> bool:
+        """MATCHGROW more chips, rebind, re-shard."""
+        from ..core.jobspec import ResourceReq
+        before = self.chips_allocated()
+        js = Jobspec(resources=[ResourceReq(self.chip_type, chips)])
+        sub = self.scheduler.match_grow(js, self.jobid)
+        if sub is None:
+            return False
+        self.events.append(ElasticEvent(
+            "grow", time.time(), before, self.chips_allocated(),
+            f"+{chips} {self.chip_type}"))
+        self.bind()
+        return True
+
+    def shrink(self, chips: int) -> bool:
+        """Relinquish ``chips`` chips (bottom-up subtractive transform)."""
+        alloc = self.scheduler.allocations.get(self.jobid)
+        if alloc is None:
+            return False
+        g = self.scheduler.graph
+        victims = [p for p in alloc.paths
+                   if p in g and g.vertex(p).type == self.chip_type]
+        if len(victims) - chips < self.model_axis:
+            return False
+        before = self.chips_allocated()
+        self.scheduler.match_shrink(self.jobid, victims[-chips:],
+                                    remove_vertices=False)
+        self.scheduler.release(self.jobid, victims[-chips:])
+        self.events.append(ElasticEvent(
+            "shrink", time.time(), before, self.chips_allocated(),
+            f"-{chips} {self.chip_type}"))
+        self.bind()
+        return True
+
+    # ---------------------------------------------------------------- #
+    def eject_and_replace(self, node_path: str,
+                          replace: bool = True) -> bool:
+        """Failure path: subtractive transform for the dead node, then a
+        MATCHGROW for replacement resources."""
+        from ..core.jobspec import ResourceReq
+        from ..core.transform import remove_subgraph
+        g = self.scheduler.graph
+        if node_path not in g:
+            return False
+        lost = [p for p in g.subtree(node_path)
+                if g.vertex(p).type == self.chip_type]
+        before = self.chips_allocated()
+        remove_subgraph(g, [node_path], jobid=self.jobid)
+        alloc = self.scheduler.allocations.get(self.jobid)
+        if alloc is not None:
+            alloc.paths = [p for p in alloc.paths if p in g]
+        self.events.append(ElasticEvent(
+            "eject", time.time(), before, self.chips_allocated(), node_path))
+        ok = True
+        if replace and lost:
+            js = Jobspec(resources=[ResourceReq(self.chip_type, len(lost))])
+            ok = self.scheduler.match_grow(js, self.jobid) is not None
+        self.bind()
+        return ok
+
+    # ---------------------------------------------------------------- #
+    def step(self, batch: Dict[str, Any]) -> Dict[str, Any]:
+        with self.mesh:
+            sharded = jax.device_put(
+                batch, self.model.input_shardings(self.shape))
+            self.params, self.opt_state, metrics = self._train_step(
+                self.params, self.opt_state, sharded)
+        return metrics

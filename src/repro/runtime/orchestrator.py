@@ -1,0 +1,135 @@
+"""KubeFlux-style orchestrator: replica sets over the graph scheduler.
+
+The paper's third capability — scheduling cloud-orchestration-framework
+tasks — as a first-class controller:
+
+* a ``ReplicaSet`` declares a pod-sized jobspec and a desired replica
+  count; the controller reconciles actual vs desired through
+  MATCHALLOCATE (first replica) and MATCHGROW/SHRINK (scaling),
+* a ``BurstPolicy`` decides when scaling may spill to the External API
+  (the paper notes Slurm/LSF gate bursting behind static cluster-wide
+  config; here it is a per-replica-set policy object, and per-USER
+  provider specialization falls out of attaching the provider to the
+  user's own scheduler instance),
+* utilization-driven autoscaling (scale on a load signal between
+  min/max replicas).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from ..core.jobspec import Jobspec
+from ..core.scheduler import SchedulerInstance
+
+
+@dataclass
+class BurstPolicy:
+    """When may a replica set consume external (cloud) resources?"""
+
+    allow_burst: bool = True
+    max_external_fraction: float = 0.5     # cap on cloud share
+    min_local_free: int = 0                # keep this many local cores free
+
+    def may_burst(self, n_local: int, n_external: int) -> bool:
+        if not self.allow_burst:
+            return False
+        total = n_local + n_external + 1
+        return (n_external + 1) / total <= self.max_external_fraction
+
+
+@dataclass
+class ReplicaSet:
+    name: str
+    pod_spec: Jobspec
+    desired: int
+    policy: BurstPolicy = field(default_factory=BurstPolicy)
+    replicas: int = 0
+    external_replicas: int = 0
+    events: List[str] = field(default_factory=list)
+
+    @property
+    def jobid(self) -> str:
+        return f"rs-{self.name}"
+
+
+class Orchestrator:
+    """Reconciles replica sets against a scheduler instance."""
+
+    def __init__(self, scheduler: SchedulerInstance):
+        self.scheduler = scheduler
+        self.replica_sets: Dict[str, ReplicaSet] = {}
+
+    def create(self, rs: ReplicaSet) -> ReplicaSet:
+        self.replica_sets[rs.name] = rs
+        self.reconcile(rs.name)
+        return rs
+
+    # ------------------------------------------------------------ #
+    def reconcile(self, name: str) -> int:
+        """Drive actual replicas toward desired.  Returns the delta
+        applied.  Scale-up prefers local resources; external bursting is
+        gated by the policy.  Scale-down releases the newest replicas
+        first (external ones before local, so cloud cost drains first)."""
+        rs = self.replica_sets[name]
+        applied = 0
+        # scale up
+        while rs.replicas < rs.desired:
+            external_before = len(self.scheduler.external_paths)
+            if rs.replicas == 0:
+                got = self.scheduler.match_allocate(rs.pod_spec,
+                                                    jobid=rs.jobid)
+                ok = got is not None
+            else:
+                # bursting allowed? temporarily detach the provider if not
+                provider = self.scheduler.external
+                if provider is not None and not rs.policy.may_burst(
+                        rs.replicas - rs.external_replicas,
+                        rs.external_replicas):
+                    self.scheduler.external = None
+                try:
+                    ok = self.scheduler.match_grow(rs.pod_spec,
+                                                   rs.jobid) is not None
+                finally:
+                    self.scheduler.external = provider
+            if not ok:
+                rs.events.append(f"scale-up blocked at {rs.replicas}")
+                break
+            burst = len(self.scheduler.external_paths) > external_before
+            rs.replicas += 1
+            rs.external_replicas += 1 if burst else 0
+            rs.events.append(
+                f"scaled to {rs.replicas}" + (" (burst)" if burst else ""))
+            applied += 1
+        # scale down
+        while rs.replicas > rs.desired:
+            per_pod = sum(r.total_vertices() for r in rs.pod_spec.resources)
+            alloc = self.scheduler.allocations.get(rs.jobid)
+            if alloc is None or len(alloc.paths) < per_pod:
+                break
+            victims = alloc.paths[-per_pod:]
+            g = self.scheduler.graph
+            was_external = any(p in set(self.scheduler.external_paths)
+                               for p in victims)
+            self.scheduler.release(rs.jobid, victims)
+            rs.replicas -= 1
+            if was_external:
+                rs.external_replicas = max(rs.external_replicas - 1, 0)
+            rs.events.append(f"scaled down to {rs.replicas}")
+            applied -= 1
+        return applied
+
+    # ------------------------------------------------------------ #
+    def autoscale(self, name: str, load: float,
+                  target_load: float = 0.7,
+                  min_replicas: int = 1, max_replicas: int = 64) -> int:
+        """Utilization-driven desired-count update + reconcile.
+        ``load`` is the replica-set's current utilization in [0, inf)."""
+        rs = self.replica_sets[name]
+        want = max(min_replicas,
+                   min(max_replicas,
+                       int(-(-rs.replicas * load // target_load))
+                       if rs.replicas else min_replicas))
+        rs.desired = want
+        return self.reconcile(name)

@@ -1,0 +1,15 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# ONE device; only launch/dryrun.py forces 512 placeholder devices.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

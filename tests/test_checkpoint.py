@@ -1,0 +1,61 @@
+"""Checkpoint manager tests: round-trip, async, GC, restore-step stream."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import CheckpointManager
+
+
+def _state(seed):
+    k = jax.random.key(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "nested": {"b": jnp.arange(5.0)}},
+            "opt_state": {"mu": jnp.ones((8, 4))}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state(0)
+    mgr.save(10, st)
+    step, restored = mgr.restore(like=st)
+    assert step == 10
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    st = _state(1)
+    mgr.save(5, st, blocking=False)
+    step, restored = mgr.restore(like=st)   # restore waits for the writer
+    assert step == 5
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(st["params"]["w"]))
+
+
+def test_gc_keeps_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(s))
+    assert mgr.latest_step() == 4
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    s1, s2 = _state(1), _state(2)
+    mgr.save(1, s1)
+    mgr.save(2, s2)
+    step, restored = mgr.restore(like=s1, step=1)
+    assert step == 1
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(s1["params"]["w"]))
+
+
+def test_restore_missing_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(like=_state(0))

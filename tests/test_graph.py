@@ -1,0 +1,149 @@
+"""Graph data-model tests: invariants, localization, JGF, hypothesis."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (ResourceGraph, Vertex, add_subgraph, build_cluster,
+                        build_tpu_fleet, remove_subgraph, update_metadata)
+
+
+def test_build_cluster_shapes():
+    g = build_cluster(nodes=2, sockets_per_node=2, cores_per_socket=16)
+    assert g.num_vertices == 1 + 2 + 4 + 64
+    assert g.num_edges == g.num_vertices - 1
+    assert g.validate_tree()
+
+
+def test_tpu_fleet_shape():
+    g = build_tpu_fleet(pods=2, racks_per_pod=4, nodes_per_rack=16,
+                        chips_per_node=4)
+    assert len(g.by_type("chip")) == 512
+    assert g.validate_tree()
+
+
+def test_jgf_roundtrip():
+    g = build_cluster(nodes=2, gpus_per_socket=2, mem_per_socket=4)
+    g2 = ResourceGraph.from_jgf_bytes(g.to_jgf_bytes())
+    assert set(g2.paths()) == set(g.paths())
+    assert sorted(g2.edges()) == sorted(g.edges())
+    assert g2.validate_tree()
+
+
+def test_subgraph_inclusion_partial_order():
+    g = build_cluster(nodes=4)
+    sub = g.extract([p for p in g.paths() if "/node1" in p])
+    assert sub.is_subgraph_of(g)
+    assert not g.is_subgraph_of(sub)
+    # additive transform on the child invalidates the SUPERgraph relation
+    v = Vertex(type="node", name="nodeX", path="/cluster0/nodeX")
+    sub.add_vertex(v)
+    sub.add_edge("/cluster0", "/cluster0/nodeX")
+    assert not sub.is_subgraph_of(g)
+
+
+def test_add_subgraph_is_identity_on_existing():
+    g = build_cluster(nodes=2)
+    sub = g.extract([p for p in g.paths() if "/node0" in p])
+    res = add_subgraph(g, sub)
+    assert res.added_vertices == 0 and res.added_edges == 0
+
+
+def test_add_subgraph_localization_cost():
+    g = build_cluster(nodes=2)
+    ext = build_cluster(nodes=1, node_prefix="extnode")
+    sub = ext.extract([p for p in ext.paths() if "extnode0" in p])
+    res = add_subgraph(g, sub)
+    update_metadata(g, res, jobid="j1")
+    # p = ancestors of the attach point only (the cluster root)
+    assert res.ancestors_updated == 1
+    assert g.validate_tree()
+    # the new resources arrive allocated to the job (MATCHGROW semantics)
+    assert all(g.vertex(p).allocations.get("j1") for p in res.new_paths)
+
+
+def test_remove_subgraph_bottom_up():
+    g = build_cluster(nodes=3)
+    n = g.num_vertices
+    res = remove_subgraph(g, ["/cluster0/node2"])
+    assert res.removed_vertices == 1 + 2 + 32
+    assert g.num_vertices == n - res.removed_vertices
+    assert g.validate_tree()
+
+
+def test_alloc_free_aggregates():
+    g = build_cluster(nodes=2)
+    cores = sorted(g.by_type("core"))[:8]
+    g.set_allocated(cores, "job-a")
+    root = g.roots[0]
+    assert g.vertex(root).agg_free["core"] == 64 - 8
+    assert g.validate_tree()
+    g.set_free(cores, "job-a")
+    assert g.vertex(root).agg_free["core"] == 64
+    assert g.validate_tree()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 63)),
+                min_size=1, max_size=40))
+def test_aggregates_invariant_under_random_alloc_free(ops):
+    """Property: after any alloc/free sequence the pruning aggregates
+    match a from-scratch recomputation (validate_tree checks both the
+    forest structure and the aggregate bookkeeping)."""
+    g = build_cluster(nodes=2, sockets_per_node=2, cores_per_socket=16)
+    cores = sorted(g.by_type("core"))
+    for alloc, idx in ops:
+        core = cores[idx]
+        if alloc:
+            g.set_allocated([core], f"job{idx}")
+        else:
+            g.set_free([core], f"job{idx}")
+    assert g.validate_tree()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 8))
+def test_add_remove_roundtrip(nodes, sockets, cores):
+    """Property: adding then removing an external subgraph restores the
+    original vertex set and aggregates."""
+    g = build_cluster(nodes=2)
+    before = set(g.paths())
+    ext = build_cluster(nodes=nodes, sockets_per_node=sockets,
+                        cores_per_socket=cores, node_prefix="burst")
+    sub = ext.extract([p for p in ext.paths() if "burst" in p])
+    res = add_subgraph(g, sub)
+    update_metadata(g, res, jobid="burst-job")
+    assert g.validate_tree()
+    remove_subgraph(g, res.new_paths, jobid="burst-job")
+    assert set(g.paths()) == before
+    assert g.validate_tree()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 2), st.integers(1, 8),
+       st.integers(2, 4))
+def test_matcher_satisfies_request_structure(nodes, sockets, cores,
+                                             cluster_nodes):
+    """Property: a successful match contains exactly the requested
+    number of vertices of each type, all free before and allocated
+    after, and nested resources sit under their parents."""
+    from repro.core import Jobspec, SchedulerInstance
+    g = build_cluster(nodes=cluster_nodes)
+    sched = SchedulerInstance("L0", g)
+    js = Jobspec.hpc(nodes=nodes, sockets=max(sockets * nodes, nodes),
+                     cores=max(cores * sockets * nodes, nodes))
+    alloc = sched.match_allocate(js, jobid="j")
+    if alloc is None:
+        return  # unsatisfiable request: nothing to check
+    types = {}
+    for p in alloc.paths:
+        v = g.vertex(p)
+        types[v.type] = types.get(v.type, 0) + 1
+        assert v.allocations.get("j") is not None
+    assert types.get("node", 0) == nodes
+    # every matched core sits under a matched socket under a matched node
+    matched = set(alloc.paths)
+    for p in alloc.paths:
+        if g.vertex(p).type == "core":
+            par = g.parent(p)
+            assert par in matched and g.vertex(par).type == "socket"
+    assert g.validate_tree()

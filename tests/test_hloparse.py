@@ -1,0 +1,55 @@
+"""Unit tests for the loop-aware HLO analyzer (drives the roofline)."""
+from repro.launch.hloparse import (Tally, analyze, parse_computations,
+                                   shape_bytes, shape_elems)
+
+SYNTHETIC_HLO = """\
+HloModule jit_step
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %ag = f32[8,16]{1,0} all-gather(%gte), channel_id=1, dimensions={0}
+  %dot.1 = f32[8,8]{1,0} dot(%ag, %ag), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  %ar = f32[8,8]{1,0} all-reduce(%dot.1), channel_id=2, to_apply=%add.0
+}
+
+%cond.1 (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%gte2, %c), direction=LT
+}
+
+ENTRY %main.9 (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %big = bf16[4,8,16]{2,1,0} all-gather(%a), channel_id=3, dimensions={0}
+  %w = (s32[], f32[8,16]) while(%tup), condition=%cond.1, body=%body.1
+  %dot.9 = f32[16,16]{1,0} dot(%a, %a), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert shape_bytes("bf16[4,8,16]") == 4 * 8 * 16 * 2
+    assert shape_bytes("(f32[2,2], s32[4])") == 16 + 16
+    assert shape_elems("f32[8,16]{1,0}") == 128
+
+
+def test_parse_computations_structure():
+    comps = parse_computations(SYNTHETIC_HLO)
+    assert "body.1" in comps and "cond.1" in comps and "main.9" in comps
+    assert comps["main.9"].whiles == [("cond.1", "body.1")]
+    assert comps["cond.1"].max_const() == 12
+
+
+def test_analyze_trip_count_weighting():
+    t = analyze(SYNTHETIC_HLO)
+    # in-loop all-gather: 12 trips x 512B; entry bf16 all-gather: 1024B
+    assert t.collective_bytes["all-gather"] == 12 * 512 + 1024
+    assert t.collective_bytes["all-reduce"] == 12 * 256
+    # dot flops: body 2*8*8*16 per trip x 12 + entry 2*16*16*8
+    assert t.dot_flops == 12 * 2 * 8 * 8 * 16 + 2 * 16 * 16 * 8
+    assert t.trip_counts == {"body.1": 12}
+    # rank buckets: 2D all-gather/reduce -> ag2d/other2d; 3D -> hi
+    assert t.collective_bytes_ag2d == 12 * 512
+    assert t.collective_bytes_other2d == 12 * 256
+    assert t.collective_bytes_hi == 1024

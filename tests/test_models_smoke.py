@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: reduced config, one train/serve step on
+CPU, asserting shapes and no NaNs (the FULL configs are exercised only
+via the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models.model import make_model
+
+
+def _batches(cfg, b=2, s=32):
+    stub = cfg.frontend != "token"
+    if stub:
+        train = {"embeds": jnp.ones((b, s, cfg.d_model), jnp.float32),
+                 "labels": jnp.zeros((b, s), jnp.int32)}
+        dec = {"embeds": jnp.ones((b, 1, cfg.d_model), jnp.float32)}
+    else:
+        train = {"tokens": jnp.ones((b, s), jnp.int32),
+                 "labels": jnp.zeros((b, s), jnp.int32)}
+        dec = {"tokens": jnp.ones((b, 1), jnp.int32)}
+    return train, dec
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke(arch_id, rng_key):
+    cfg = get_config(arch_id).reduced()
+    model = make_model(cfg)
+    params = model.init_params(rng_key)
+    opt = model.init_opt(params)
+    train, dec = _batches(cfg)
+    b, s = train["labels"].shape
+
+    p2, o2, metrics = jax.jit(model.train_step)(params, opt, train)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    l0 = jax.tree_util.tree_leaves(params)[0]
+    l1 = jax.tree_util.tree_leaves(p2)[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+    prompt = {k: v for k, v in train.items() if k != "labels"}
+    logits, cache = jax.jit(model.prefill_step)(params, prompt)
+    assert logits.shape == (b, 1, cfg.vocab)
+    lg, cache2 = jax.jit(model.serve_step)(params, cache, dec,
+                                           jnp.int32(s - 1))
+    assert lg.shape == (b, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+    assert jax.tree_util.tree_structure(cache2) == \
+        jax.tree_util.tree_structure(cache)
+
+
+@pytest.mark.parametrize("arch_id", ["llama3.2-3b", "mamba2-2.7b",
+                                     "zamba2-2.7b", "qwen3-moe-30b-a3b"])
+def test_decode_consistent_with_forward(arch_id, rng_key):
+    """prefill(s tokens) + decode(token s) must equal a full forward over
+    s+1 tokens at the last position — validates the cache path."""
+    cfg = get_config(arch_id).reduced()
+    import dataclasses
+    # dispatch MoE drops tokens at tiny capacity; use the dense oracle
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, moe_impl="dense")
+    model = make_model(cfg)
+    params = model.init_params(rng_key)
+    s = 16
+    toks = jax.random.randint(jax.random.key(1), (2, s + 1), 0, cfg.vocab)
+
+    from repro.models.transformer import forward
+    full_logits, _ = forward(params, cfg, model.ctx, tokens=toks)
+
+    _, cache = jax.jit(model.prefill_step)(params, {"tokens": toks[:, :s]})
+
+    # serve_step writes at index s; grow the KV seq axis by one slot
+    # (SSM conv/ssm states keep their exact shapes)
+    def grow(name, a):
+        if name not in ("k", "v", "shared_k", "shared_v"):
+            return a
+        ax = a.ndim - 3          # [..., seq, kv_heads, head_dim]
+        pad_width = [(0, 0)] * a.ndim
+        pad_width[ax] = (0, 1)
+        return jnp.pad(a, pad_width)
+    cache = {k: grow(k, v) for k, v in cache.items()}
+    lg, _ = jax.jit(model.serve_step)(params, cache,
+                                      {"tokens": toks[:, s:s + 1]},
+                                      jnp.int32(s))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_param_counts_plausible():
+    """Config param formula vs actual init sizes (within 1%)."""
+    for arch_id in ("llama3.2-3b", "qwen3-moe-30b-a3b", "mamba2-2.7b"):
+        cfg = get_config(arch_id)
+        model = make_model(cfg)
+        shapes = jax.tree_util.tree_leaves(model.param_shapes())
+        actual = sum(int(np.prod(s.shape)) for s in shapes)
+        approx = cfg.n_params()
+        assert abs(actual - approx) / actual < 0.02, \
+            (arch_id, actual, approx)
+
+
+def test_reported_scale_matches_billing_name():
+    """Sanity: param counts are in the ballpark the names claim."""
+    expect = {"llama3.2-3b": (2.5e9, 4.5e9),
+              "phi3-medium-14b": (12e9, 16e9),
+              "nemotron-4-15b": (13e9, 18e9),
+              "qwen2-vl-72b": (65e9, 80e9),
+              "llama4-maverick-400b-a17b": (350e9, 450e9),
+              "qwen3-moe-30b-a3b": (25e9, 35e9),
+              "mamba2-2.7b": (2.2e9, 3.2e9),
+              "zamba2-2.7b": (2.2e9, 3.4e9)}
+    for arch_id, (lo, hi) in expect.items():
+        n = get_config(arch_id).n_params()
+        assert lo <= n <= hi, (arch_id, n)

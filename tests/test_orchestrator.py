@@ -1,0 +1,79 @@
+"""Orchestrator (capability 3) tests: reconcile, burst policy, autoscale."""
+import pytest
+
+from repro.core import (Jobspec, ResourceReq, SchedulerInstance,
+                        SimulatedEC2Provider, build_cluster)
+from repro.runtime.orchestrator import BurstPolicy, Orchestrator, ReplicaSet
+
+POD = Jobspec(resources=[ResourceReq("core", 4)])
+
+
+def _sched(nodes=2, cores=8, external=False):
+    g = build_cluster(nodes=nodes, sockets_per_node=2,
+                      cores_per_socket=cores)
+    prov = SimulatedEC2Provider(seed=5) if external else None
+    return SchedulerInstance("orch", g, external=prov)
+
+
+def test_reconcile_scale_up_and_down():
+    orch = Orchestrator(_sched())
+    rs = orch.create(ReplicaSet("web", POD, desired=4))
+    assert rs.replicas == 4
+    assert len(orch.scheduler.allocations[rs.jobid].paths) == 16
+    rs.desired = 2
+    orch.reconcile("web")
+    assert rs.replicas == 2
+    assert len(orch.scheduler.allocations[rs.jobid].paths) == 8
+    assert orch.scheduler.graph.validate_tree()
+
+
+def test_scale_up_blocked_without_burst():
+    """Local cluster holds 8 pods; no provider -> stuck at 8."""
+    orch = Orchestrator(_sched(nodes=2, cores=8))
+    rs = orch.create(ReplicaSet("big", POD, desired=12,
+                                policy=BurstPolicy(allow_burst=False)))
+    assert rs.replicas == 8
+    assert any("blocked" in e for e in rs.events)
+
+
+def test_burst_policy_caps_external_fraction():
+    orch = Orchestrator(_sched(nodes=2, cores=8, external=True))
+    rs = orch.create(ReplicaSet(
+        "burst", POD, desired=12,
+        policy=BurstPolicy(max_external_fraction=0.25)))
+    # 8 local + external capped at 25% of total
+    assert rs.replicas > 8
+    assert rs.external_replicas / rs.replicas <= 0.26
+    assert rs.external_replicas > 0
+
+
+def test_burst_unlimited_reaches_desired():
+    orch = Orchestrator(_sched(nodes=1, cores=8, external=True))
+    rs = orch.create(ReplicaSet(
+        "elastic", POD, desired=10,
+        policy=BurstPolicy(max_external_fraction=1.0)))
+    assert rs.replicas == 10
+    assert rs.external_replicas >= 6   # only 4 pods fit locally
+
+
+def test_autoscale_up_then_down():
+    orch = Orchestrator(_sched(nodes=4, cores=16))
+    rs = orch.create(ReplicaSet("svc", POD, desired=2))
+    orch.autoscale("svc", load=1.4, target_load=0.7)   # 2x overload
+    assert rs.replicas == 4
+    orch.autoscale("svc", load=0.2, target_load=0.7, min_replicas=1)
+    assert rs.replicas < 4
+    assert orch.scheduler.graph.validate_tree()
+
+
+def test_scale_down_drains_external_first():
+    orch = Orchestrator(_sched(nodes=1, cores=8, external=True))
+    rs = orch.create(ReplicaSet(
+        "drain", POD, desired=6,
+        policy=BurstPolicy(max_external_fraction=1.0)))
+    assert rs.external_replicas > 0
+    ext_before = rs.external_replicas
+    rs.desired = 4
+    orch.reconcile("drain")
+    assert rs.replicas == 4
+    assert rs.external_replicas < ext_before

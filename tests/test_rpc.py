@@ -1,0 +1,36 @@
+"""RPC transport tests (two regimes)."""
+import pytest
+
+from repro.core.rpc import (InProcTransport, RPCServer, SocketTransport,
+                            _decode_frame, _encode_frame, pack_json,
+                            unpack_json)
+
+
+def test_frame_codec_roundtrip():
+    m, p = _decode_frame(_encode_frame("match_grow", b"payload-bytes"))
+    assert m == "match_grow" and p == b"payload-bytes"
+
+
+def test_inproc_transport():
+    t = InProcTransport(lambda m, p: (m + ":").encode() + p)
+    assert t.call("x", b"abc") == b"x:abc"
+    assert t.regime == "intranode"
+
+
+def test_socket_transport_roundtrip():
+    srv = RPCServer(lambda m, p: p[::-1])
+    try:
+        t = SocketTransport(srv.address)
+        assert t.call("rev", b"abcdef") == b"fedcba"
+        # larger payloads (multi-frame reads)
+        big = bytes(range(256)) * 4096
+        assert t.call("rev", big) == big[::-1]
+        t.close()
+    finally:
+        srv.close()
+
+
+def test_json_helpers():
+    d = {"jobspec": {"resources": [{"type": "core", "count": 4}]}}
+    assert unpack_json(pack_json(d)) == d
+    assert unpack_json(b"") == {}
