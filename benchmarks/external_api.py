@@ -65,7 +65,7 @@ def run(repeat: int = 20) -> List[Dict]:
         t0 = time.perf_counter()
         sub = sched.match_grow(Jobspec.fleet(10), "job")
         dt = time.perf_counter() - t0
-        assert sub is not None
+        assert sub
         fleet_rows.append({"test": f"fleet-{i}", "e2e_s": dt,
                            "subgraph_size": sub.size,
                            "modeled_create_s": 0.0})

@@ -113,7 +113,7 @@ def fit(repeat: int = 30) -> List[Dict]:
         t0w = time.perf_counter()
         sub = h.leaf.match_grow(mixed, "init")
         t_total = time.perf_counter() - t0w
-        assert sub is not None
+        assert sub
         per = {inst.name: inst.timings[-1] for inst in h.instances}
         t_match_total = sum(t.t_match for t in per.values())
         t0 = per["L0"].t_match

@@ -42,7 +42,7 @@ def run(repeat: int = 20, pods: int = 100) -> List[Dict]:
             t0 = time.perf_counter()
             sub = sched.match_grow(POD, "rs")
             mg_times.append(time.perf_counter() - t0)
-            assert sub is not None
+            assert sub
         assert len(sched.allocations["rs"].paths) == pods * 4
     ma_s, mg_s = summarize(ma_times), summarize(mg_times)
     rows = [

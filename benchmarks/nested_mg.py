@@ -61,7 +61,7 @@ def run(repeat: int = 100, tests: List[str] = None) -> List[Dict]:
             h = build_hierarchy()
             try:
                 sub = h.leaf.match_grow(js, "init")
-                assert sub is not None, tname
+                assert sub, tname
                 # one timing per level per rep; compute PURE per-hop
                 # transport: raw t_comms includes the parent's recursive
                 # work, so subtract the parent's recorded total (the

@@ -41,6 +41,11 @@ def main() -> int:
     print("# paper §5.4 — KubeFlux MA vs MG, 100 pods")
     kubeflux.run(repeat_small, pods=100)
 
+    print("#" * 72)
+    print("# queue churn — workload-trace replay at 3 hierarchy depths")
+    from . import trace_replay
+    trace_replay.run(n_jobs=60 if args.quick else 200)
+
     if not args.skip_roofline:
         print("#" * 72)
         print("# roofline over dry-run artifacts (brief §Roofline)")

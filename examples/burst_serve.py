@@ -18,7 +18,7 @@ sched = SchedulerInstance("orchestrator", g,
 pod = Jobspec(resources=[ResourceReq("core", 4)])
 sched.match_allocate(pod, jobid="replicaset")
 for i in range(12):                       # exceeds the 32 local cores
-    assert sched.match_grow(pod, "replicaset") is not None
+    assert sched.match_grow(pod, "replicaset")
 ext = [p for p in sched.external_paths]
 print(f"replicaset: {len(sched.allocations['replicaset'].paths)} vertices, "
       f"{len(ext)} from the cloud provider")

@@ -4,17 +4,24 @@ from .jobspec import Jobspec, ResourceReq
 from .match import Matcher
 from .transform import (TransformKind, TransformResult, add_subgraph,
                         remove_subgraph, update_metadata)
-from .scheduler import (Allocation, Hierarchy, MGTiming, SchedulerInstance,
-                        build_chain)
+from .engine import Allocation, GrowEngine, GrowResult, MGTiming
+from .scheduler import (Hierarchy, SchedulerInstance, TreeSpec, build_chain,
+                        build_tree)
+from .queue import (Clock, Job, JobQueue, JobState, QueueStats, SimClock,
+                    WallClock)
 from .external import (AWS_ZONES, TABLE3_CATALOG, ExternalProvider,
                        InstanceType, ProvisionResult, SimulatedEC2Provider,
                        TPUSliceProvider, fleet_catalog)
+from .rpc import MethodRegistry
 
 __all__ = [
     "CONTAINMENT", "ResourceGraph", "Vertex", "build_cluster",
     "build_tpu_fleet", "Jobspec", "ResourceReq", "Matcher", "TransformKind",
     "TransformResult", "add_subgraph", "remove_subgraph", "update_metadata",
-    "Allocation", "Hierarchy", "MGTiming", "SchedulerInstance", "build_chain",
+    "Allocation", "GrowEngine", "GrowResult", "Hierarchy", "MGTiming",
+    "SchedulerInstance", "TreeSpec", "build_chain", "build_tree",
+    "Clock", "Job", "JobQueue", "JobState", "QueueStats", "SimClock",
+    "WallClock", "MethodRegistry",
     "AWS_ZONES", "TABLE3_CATALOG", "ExternalProvider", "InstanceType",
     "ProvisionResult", "SimulatedEC2Provider", "TPUSliceProvider",
     "fleet_catalog",

@@ -1,0 +1,345 @@
+"""The unified MATCHGROW engine (paper Algorithm 1).
+
+One implementation of the MG pipeline shared by the caller side
+(``SchedulerInstance.match_grow``) and the RPC-server side (the
+``match_grow`` method a parent serves to its children):
+
+    local match  ->  sibling reclaim  ->  forward up  ->  external
+                 ->  splice + update + allocation bookkeeping
+
+Every stage returns through a single ``GrowResult`` type — there is no
+more ``Optional[ResourceGraph]``-annotated-but-sometimes-something-else
+API.  A failed grow returns a *falsy* GrowResult that still carries the
+MGTiming record, so benchmarks see failures too.
+
+Sibling routing (paper Fig. 2 multi-user topology): when an instance
+cannot satisfy a child's request locally, it first asks the requester's
+*sibling* subtrees to give back free resources (the ``reclaim`` RPC)
+before escalating to its own parent or the External API.  The donating
+sibling removes the matched subgraph from its graph (a bottom-up
+subtractive transform on the donor), the parent reassigns the vertices
+to the requesting job, and the subgraph travels down to the requester in
+JGF exactly like a parent-matched subgraph.
+
+The JGF payload is encoded exactly once, at the level that matched, and
+forwarded verbatim by intermediate levels (§Perf control-plane
+optimization); encoding happens *outside* the measured t_match /
+t_comms / t_add_upd components, matching the paper's accounting.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .graph import CONTAINMENT
+from .jobspec import Jobspec
+from .match import Matcher
+from .rpc import pack_json
+from .transform import (add_subgraph, remove_subgraph, splice_jgf,
+                        update_metadata)
+
+
+def _jgf_paths(jgf: Dict) -> List[str]:
+    """All vertex paths named by a JGF payload."""
+    out = []
+    for node in jgf["graph"]["nodes"]:
+        meta = node["metadata"]
+        p = meta["paths"]
+        out.append(p[CONTAINMENT] if isinstance(p, dict) else p)
+    return out
+
+
+@dataclass
+class MGTiming:
+    """Per-level component timings for one MATCHGROW (paper Section 6)."""
+
+    level: str
+    jobid: str
+    request_size: int          # |V|+|E| of the requested subgraph
+    matched_size: int = 0      # |V|+|E| of the matched subgraph
+    t_match: float = 0.0
+    t_comms: float = 0.0
+    t_add_upd: float = 0.0
+    matched_locally: bool = False
+    external: bool = False
+    via_sibling: Optional[str] = None   # donor sibling name, if routed
+    ancestors_updated: int = 0
+
+    @property
+    def total(self) -> float:
+        return self.t_match + self.t_comms + self.t_add_upd
+
+
+@dataclass
+class Allocation:
+    jobid: str
+    paths: List[str] = field(default_factory=list)
+
+    @property
+    def n_vertices(self) -> int:
+        return len(self.paths)
+
+
+class GrowResult:
+    """The one return type of MATCHGROW.
+
+    Truthiness == success.  ``via`` records where the subgraph came
+    from: "local", "sibling:<name>", "parent", "external", or None on
+    failure.  ``jgf`` holds the encoded subgraph when the grow was
+    served over RPC (encoded once, forwarded verbatim).
+    """
+
+    __slots__ = ("ok", "new_paths", "size", "via", "timing", "jgf")
+
+    def __init__(self, ok: bool, new_paths: Optional[List[str]] = None,
+                 size: int = 0, via: Optional[str] = None,
+                 timing: Optional[MGTiming] = None,
+                 jgf: Optional[bytes] = None):
+        self.ok = ok
+        self.new_paths = new_paths or []
+        self.size = size
+        self.via = via
+        self.timing = timing
+        self.jgf = jgf
+
+    def __bool__(self) -> bool:
+        return self.ok
+
+    def paths(self) -> List[str]:
+        return list(self.new_paths)
+
+    @property
+    def matched_locally(self) -> bool:
+        return self.via == "local"
+
+    @property
+    def external(self) -> bool:
+        return self.via == "external"
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"GrowResult(ok={self.ok}, via={self.via!r}, "
+                f"size={self.size}, n_paths={len(self.new_paths)})")
+
+
+class GrowEngine:
+    """The shared MG algorithm, bound to one scheduler instance.
+
+    The host must expose: ``name``, ``graph``, ``parent`` (Transport or
+    None), ``children`` (name -> Transport), ``external``,
+    ``external_at_any_level``, ``allocations``, ``timings``,
+    ``external_paths``.  ``SchedulerInstance`` is the only host today;
+    the indirection is what lets the caller and RPC-server sides share
+    one implementation.
+    """
+
+    def __init__(self, host) -> None:
+        self.host = host
+
+    # ------------------------------------------------------------------ #
+    def grow(self, jobspec: Jobspec, jobid: str, *,
+             requester: Optional[str] = None,
+             encode: bool = False) -> GrowResult:
+        """Run one MATCHGROW at this level.
+
+        ``requester`` names the child the request came from (excluded
+        from sibling routing); ``encode=True`` additionally produces the
+        JGF bytes an RPC response needs (the caller side skips this).
+        """
+        host = self.host
+        rec = MGTiming(level=host.name, jobid=jobid,
+                       request_size=jobspec.graph_size())
+
+        # 1. local match (MATCHALLOCATE with grow semantics)
+        t0 = time.perf_counter()
+        matcher = Matcher(host.graph)
+        paths = matcher.match(jobspec)
+        rec.t_match = time.perf_counter() - t0
+        if paths is not None:
+            host.graph.set_allocated(paths, jobid)
+            self._book(jobid, paths)
+            sub = host.graph.extract(paths)
+            rec.matched_locally = True
+            rec.matched_size = sub.size
+            host.timings.append(rec)
+            return GrowResult(
+                True, new_paths=list(paths), size=sub.size, via="local",
+                timing=rec,
+                jgf=sub.to_jgf_bytes() if encode else None)
+
+        # 2. sibling routing: reclaim from other child subtrees first
+        res = self._reclaim_from_children(jobspec, jobid, requester, rec,
+                                          encode)
+        if res is not None:
+            return res
+
+        # 3. forward up the hierarchy
+        res = self._forward_to_parent(jobspec, jobid, rec)
+        if res is not None:
+            return res
+
+        # 4. external fallback (top level, or any level when enabled)
+        res = self._provision_external(jobspec, jobid, rec, encode)
+        if res is not None:
+            return res
+
+        host.timings.append(rec)
+        return GrowResult(False, timing=rec)
+
+    # ------------------------------------------------------------------ #
+    # stages
+    # ------------------------------------------------------------------ #
+    def _book(self, jobid: str, paths: List[str]) -> Allocation:
+        alloc = self.host.allocations.setdefault(jobid, Allocation(jobid))
+        alloc.paths.extend(paths)
+        return alloc
+
+    def _reclaim_from_children(self, jobspec: Jobspec, jobid: str,
+                               requester: Optional[str], rec: MGTiming,
+                               encode: bool) -> Optional[GrowResult]:
+        host = self.host
+        for name, transport in host.children.items():
+            if name == requester:
+                continue
+            t0 = time.perf_counter()
+            resp = transport.call("reclaim", pack_json(
+                {"jobspec": jobspec.to_dict(), "jobid": jobid}))
+            rec.t_comms += time.perf_counter() - t0
+            if not resp:
+                continue
+            data = json.loads(resp)
+            donated: List[str] = data["paths"]
+            jgf = data["jgf"]
+            # Splice is the identity for vertices this level already
+            # holds (the donor's graph is a subgraph of ours); anything
+            # genuinely new (e.g. the donor's own external resources)
+            # is added like a parent-matched subgraph.
+            t0 = time.perf_counter()
+            tres = splice_jgf(host.graph, jgf)
+            update_metadata(host.graph, tres, jobid=jobid)
+            host.graph.reassign(donated, jobid)
+            rec.t_add_upd += time.perf_counter() - t0
+            rec.matched_size = len(jgf["graph"]["nodes"]) + \
+                len(jgf["graph"].get("edges", []))
+            rec.ancestors_updated = tres.ancestors_updated
+            rec.via_sibling = name
+            # vertices the donor held that we did not (e.g. its own
+            # external resources) only live here for this job
+            host.spliced_paths.update(tres.new_paths)
+            self._book(jobid, donated)
+            host.timings.append(rec)
+            return GrowResult(
+                True, new_paths=donated, size=rec.matched_size,
+                via=f"sibling:{name}", timing=rec,
+                jgf=json.dumps(jgf, separators=(",", ":")).encode()
+                if encode else None)
+        return None
+
+    @staticmethod
+    def _aliased(data: Dict, tres, jobid: str) -> bool:
+        """True when the payload's *matched* vertices (the ones the
+        ancestor allocated to ``jobid``; the free ancestor spine does
+        not count) were not all new to this graph — or when nothing at
+        all was new."""
+        if not tres.new_paths:
+            return True
+        new = set(tres.new_paths)
+        for node in data["graph"]["nodes"]:
+            meta = node["metadata"]
+            if jobid in meta.get("allocations", ()):
+                p = meta["paths"]
+                path = p[CONTAINMENT] if isinstance(p, dict) else p
+                if path not in new:
+                    return True
+        return False
+
+    def _forward_to_parent(self, jobspec: Jobspec, jobid: str,
+                           rec: MGTiming) -> Optional[GrowResult]:
+        host = self.host
+        if host.parent is None:
+            return None
+        t0 = time.perf_counter()
+        resp = host.parent.call("match_grow", pack_json(
+            {"jobspec": jobspec.to_dict(), "jobid": jobid,
+             "from": host.name}))
+        rec.t_comms += time.perf_counter() - t0
+        if not resp:
+            return None
+        # fused deserialize + AddSubgraph (RunGrow add=True)
+        t0 = time.perf_counter()
+        data = json.loads(resp)
+        tres = splice_jgf(host.graph, data)
+        if self._aliased(data, tres, jobid):
+            # vertices the ancestor matched (and allocated to the job)
+            # already exist here: the hierarchy's path namespaces alias
+            # (subgraph-inclusion discipline broken upstream).  Booking
+            # this grow would double-use local vertices and strand the
+            # ancestor's allocation on release — undo and fail instead.
+            rec.t_add_upd = time.perf_counter() - t0
+            if tres.new_paths:          # roll the partial splice back
+                update_metadata(host.graph, tres)
+                remove_subgraph(host.graph, list(tres.new_paths))
+            host.parent.call("release", pack_json(
+                {"jobid": jobid, "paths": _jgf_paths(data)}))
+            host.timings.append(rec)
+            return GrowResult(False, timing=rec)
+        update_metadata(host.graph, tres, jobid=jobid)
+        rec.t_add_upd = time.perf_counter() - t0
+        rec.matched_size = tres.total_size
+        rec.ancestors_updated = tres.ancestors_updated
+        host.spliced_paths.update(tres.new_paths)
+        self._book(jobid, tres.new_paths)
+        host.timings.append(rec)
+        return GrowResult(
+            True, new_paths=list(tres.new_paths), size=tres.total_size,
+            via="parent", timing=rec, jgf=bytes(resp))  # verbatim
+
+    def _provision_external(self, jobspec: Jobspec, jobid: str,
+                            rec: MGTiming,
+                            encode: bool) -> Optional[GrowResult]:
+        host = self.host
+        if host.external is None or (
+                host.parent is not None and not host.external_at_any_level):
+            return None
+        root = host.graph.roots[0] if host.graph.roots else "/external"
+        result = host.external.provision(jobspec, root)
+        if result is None:
+            return None
+        rec.external = True
+        t0 = time.perf_counter()
+        tres = add_subgraph(host.graph, result.subgraph)
+        update_metadata(host.graph, tres, jobid=jobid)
+        rec.t_add_upd = time.perf_counter() - t0
+        rec.matched_size = result.subgraph.size
+        rec.ancestors_updated = tres.ancestors_updated
+        self._book(jobid, tres.new_paths)
+        host.external_paths.update(tres.new_paths)
+        host.timings.append(rec)
+        return GrowResult(
+            True, new_paths=list(tres.new_paths), size=result.subgraph.size,
+            via="external", timing=rec,
+            jgf=result.subgraph.to_jgf_bytes() if encode else None)
+
+    # ------------------------------------------------------------------ #
+    # donor side of sibling routing
+    # ------------------------------------------------------------------ #
+    def reclaim(self, jobspec: Jobspec) -> Optional[Dict]:
+        """Give back free local resources matching ``jobspec``.
+
+        Local-only (never recurses — the *parent* owns escalation), and
+        subtractive on the donor: the matched subgraph leaves this
+        instance's graph bottom-up, preserving subgraph inclusion with
+        the sibling that receives it.  Returns ``{"paths", "jgf"}`` or
+        None when nothing matches.
+        """
+        host = self.host
+        matcher = Matcher(host.graph)
+        paths = matcher.match(jobspec)
+        if paths is None:
+            return None
+        sub = host.graph.extract(paths)     # extract while still free
+        remove_subgraph(host.graph, list(paths))
+        host.spliced_paths.difference_update(paths)
+        host.external_paths.difference_update(paths)
+        return {"paths": list(paths), "jgf": sub.to_jgf()}

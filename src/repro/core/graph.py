@@ -30,6 +30,12 @@ DOWN = "down"
 # Containment edge subsystem name (Fluxion uses "containment").
 CONTAINMENT = "containment"
 
+# Jobid prefix marking delegation rather than a live workload: a parent
+# that hands a subtree to a child instance marks the vertices allocated
+# to a jobid starting with this prefix ("delegated", "delegated-to-X").
+# Sibling reclaim may displace delegation markers but never a real job.
+DELEGATION_PREFIX = "delegated"
+
 
 @dataclass(slots=True)
 class Vertex:
@@ -288,6 +294,30 @@ class ResourceGraph:
                 v.agg_free[v.type] = v.agg_free.get(v.type, 0) + 1
                 touched[path] = {v.type: +1}
         self._bubble_group(touched, pset)
+
+    def reassign(self, paths: Iterable[str], jobid: str) -> None:
+        """Hand vertices over to ``jobid``.
+
+        Used when a parent re-routes resources between child subtrees
+        (sibling reclaim).  Free vertices go through the normal
+        aggregate-updating allocation.  Already-allocated vertices are
+        rebound in place (allocated before and after, so the pruning
+        aggregates are unchanged) — but only *delegation markers*
+        (jobids starting with ``DELEGATION_PREFIX``) are displaced; a
+        binding to a live job is never stolen: the new jobid is added
+        alongside, keeping both owners' release bookkeeping intact and
+        the conflict visible.  Paths absent from this graph are ignored
+        — a donor's external resources need not exist here.
+        """
+        present = [p for p in paths if p in self._v]
+        self.set_allocated([p for p in present if self._v[p].free], jobid)
+        for p in present:
+            v = self._v[p]
+            if jobid not in v.allocations:
+                for owner in [j for j in v.allocations
+                              if j.startswith(DELEGATION_PREFIX)]:
+                    del v.allocations[owner]
+                v.allocations[jobid] = v.size
 
     def _bubble_group(self, touched: Dict[str, Dict[str, int]], group: Set[str]) -> None:
         """Bubble per-vertex deltas: internal ancestors within ``group`` are

@@ -31,6 +31,39 @@ Handler = Callable[[str, bytes], bytes]
 _HDR = struct.Struct("!I")  # 4-byte length prefix
 
 
+class MethodRegistry:
+    """Named-method dispatch table for RPC servers.
+
+    Scheduler instances (and extensions) register payload handlers under
+    a method name; the registry itself is a ``Handler``, so it plugs
+    into either transport regime unchanged.
+    """
+
+    def __init__(self) -> None:
+        self._methods: Dict[str, Callable[[bytes], bytes]] = {}
+
+    def register(self, name: str,
+                 fn: Callable[[bytes], bytes]) -> None:
+        self._methods[name] = fn
+
+    def unregister(self, name: str) -> None:
+        self._methods.pop(name, None)
+
+    def methods(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._methods))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._methods
+
+    def __call__(self, method: str, payload: bytes) -> bytes:
+        fn = self._methods.get(method)
+        if fn is None:
+            raise ValueError(
+                f"unknown RPC method {method!r}; "
+                f"registered: {', '.join(self.methods()) or '(none)'}")
+        return fn(payload)
+
+
 class Transport:
     """Abstract parent-facing call channel."""
 

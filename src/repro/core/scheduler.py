@@ -4,17 +4,22 @@ Implements the paper's Algorithm 1 over the dynamic resource graph:
 
 * ``match_allocate`` (MA) — match a jobspec against the local graph and
   allocate the resources on success.
-* ``match_grow`` (MG) — try MA locally; on success the matched resources
-  join an *existing* allocation (``RunGrow(sub, add=False)``).  On local
-  failure the request is forwarded to the parent instance via RPC; the
-  parent recurses, and at the top level falls through to the External
-  API.  The matched subgraph travels back down in JGF; every level on
-  the way splices it in with ``AddSubgraph`` + ``UpdateMetadata``
-  (``RunGrow(sub, add=True)``) — the top-down additive transform.
+* ``match_grow`` (MG) — one call into the shared :class:`GrowEngine`
+  (``core/engine.py``): try MA locally; on local failure ask sibling
+  subtrees to reclaim free resources; then forward to the parent
+  instance via RPC; at the top level fall through to the External API.
+  The matched subgraph travels back down in JGF; every level on the way
+  splices it in with ``AddSubgraph`` + ``UpdateMetadata`` — the
+  top-down additive transform.  The RPC-served side runs the *same*
+  engine with ``encode=True``.
 * ``match_shrink`` — the subtractive transform, applied bottom-up: the
   leaf removes the subgraph first, then notifies its parent, which
   releases the allocation (and optionally removes vertices that only
   existed for this child, e.g. external resources).
+
+The hierarchy is a *tree* (paper Fig. 2's multi-user topology), not
+just a chain: an instance can have many children, and a parent routes a
+child's failed MG to the child's siblings before escalating.
 
 Every MG records per-level component timings (t_match, t_comms,
 t_add_upd), which the benchmarks aggregate to reproduce the paper's
@@ -25,73 +30,28 @@ Figures 1/3/4 and its analytical model (Section 6):
 from __future__ import annotations
 
 import itertools
-import json
-import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
-from .external import ExternalProvider, ProvisionResult
+from .engine import Allocation, GrowEngine, GrowResult, MGTiming
+from .external import ExternalProvider
 from .graph import ResourceGraph
 from .jobspec import Jobspec
 from .match import Matcher
-from .rpc import (InProcTransport, RPCServer, SocketTransport, Transport,
-                  pack_json, unpack_json)
-from .transform import (TransformKind, TransformResult, add_subgraph,
-                        remove_subgraph, splice_jgf, update_metadata)
-
-
-class SplicedSubgraph:
-    """Lightweight view of a subgraph spliced from a JGF payload —
-    exposes the size/paths surface callers need without materializing a
-    second ResourceGraph (§Perf control-plane optimization)."""
-
-    __slots__ = ("size", "_paths")
-
-    def __init__(self, size: int, paths: List[str]):
-        self.size = size
-        self._paths = paths
-
-    def paths(self) -> List[str]:
-        return list(self._paths)
-
-
-@dataclass
-class MGTiming:
-    """Per-level component timings for one MATCHGROW (paper Section 6)."""
-
-    level: str
-    jobid: str
-    request_size: int          # |V|+|E| of the requested subgraph
-    matched_size: int = 0      # |V|+|E| of the matched subgraph
-    t_match: float = 0.0
-    t_comms: float = 0.0
-    t_add_upd: float = 0.0
-    matched_locally: bool = False
-    external: bool = False
-    ancestors_updated: int = 0
-
-    @property
-    def total(self) -> float:
-        return self.t_match + self.t_comms + self.t_add_upd
-
-
-@dataclass
-class Allocation:
-    jobid: str
-    paths: List[str] = field(default_factory=list)
-
-    @property
-    def n_vertices(self) -> int:
-        return len(self.paths)
+from .rpc import (InProcTransport, MethodRegistry, RPCServer, SocketTransport,
+                  Transport, pack_json, unpack_json)
+from .transform import TransformKind, TransformResult, remove_subgraph
 
 
 class SchedulerInstance:
     """One level of the fully hierarchical scheduler.
 
     ``parent`` is a Transport (in-proc for intranode, socket for
-    internode) or None for the top level.  ``external`` is the optional
-    ExternalAPI provider — per the paper, an external provider attached
-    to a *non-top* instance realizes "external resource specialization"
+    internode) or None for the top level.  ``children`` maps child
+    instance names to *downward* transports, used for sibling routing
+    (the ``reclaim`` RPC).  ``external`` is the optional ExternalAPI
+    provider — per the paper, an external provider attached to a
+    *non-top* instance realizes "external resource specialization"
     (resources E_i = G_i \\ G_0 managed independently of the top level).
     """
 
@@ -106,9 +66,19 @@ class SchedulerInstance:
         self.external_at_any_level = external_at_any_level
         self.allocations: Dict[str, Allocation] = {}
         self.timings: List[MGTiming] = []
+        self.children: Dict[str, Transport] = {}
+        self.engine = GrowEngine(self)
         self._jobids = itertools.count()
         self._server: Optional[RPCServer] = None
-        self.external_paths: List[str] = []   # E_i bookkeeping
+        self.external_paths: Set[str] = set()   # E_i bookkeeping
+        # vertices spliced in from above (parent/sibling grows): they
+        # only exist here for a job's lifetime and are removed — not
+        # freed into the local pool — when that job releases them
+        self.spliced_paths: Set[str] = set()
+        self.methods = MethodRegistry()
+        self.methods.register("match_grow", self._rpc_match_grow)
+        self.methods.register("release", self._rpc_release)
+        self.methods.register("reclaim", self._rpc_reclaim)
 
     # ------------------------------------------------------------------ #
     # serving (parent side)
@@ -123,23 +93,42 @@ class SchedulerInstance:
         """An "intranode" channel to this instance."""
         return InProcTransport(self.rpc_handler)
 
+    def add_child(self, name: str, transport: Transport) -> None:
+        """Register a downward channel to a child (sibling routing)."""
+        self.children[name] = transport
+
     def close(self) -> None:
         if self._server is not None:
             self._server.close()
             self._server = None
 
     def rpc_handler(self, method: str, payload: bytes) -> bytes:
-        if method == "match_grow":
-            req = unpack_json(payload)
-            jobspec = Jobspec.from_dict(req["jobspec"])
-            jobid = req.get("jobid", "remote")
-            jgf = self._serve_match_grow(jobspec, jobid)
-            return jgf if jgf is not None else b""
-        if method == "release":
-            req = unpack_json(payload)
-            self.release(req["jobid"], req.get("paths"))
-            return pack_json({"ok": True})
-        raise ValueError(f"unknown RPC method {method!r}")
+        return self.methods(method, payload)
+
+    def register_method(self, name: str,
+                        fn: Callable[[bytes], bytes]) -> None:
+        """Extension point: expose an extra RPC method on this level."""
+        self.methods.register(name, fn)
+
+    # -- registered RPC methods ---------------------------------------- #
+    def _rpc_match_grow(self, payload: bytes) -> bytes:
+        req = unpack_json(payload)
+        jobspec = Jobspec.from_dict(req["jobspec"])
+        jobid = req.get("jobid", "remote")
+        res = self.engine.grow(jobspec, jobid,
+                               requester=req.get("from"), encode=True)
+        return res.jgf if res and res.jgf is not None else b""
+
+    def _rpc_release(self, payload: bytes) -> bytes:
+        req = unpack_json(payload)
+        self.release(req["jobid"], req.get("paths"))
+        return pack_json({"ok": True})
+
+    def _rpc_reclaim(self, payload: bytes) -> bytes:
+        req = unpack_json(payload)
+        jobspec = Jobspec.from_dict(req["jobspec"])
+        out = self.engine.reclaim(jobspec)
+        return pack_json(out) if out is not None else b""
 
     # ------------------------------------------------------------------ #
     # MATCHALLOCATE
@@ -161,130 +150,15 @@ class SchedulerInstance:
         return alloc
 
     # ------------------------------------------------------------------ #
-    # MATCHGROW (Algorithm 1)
+    # MATCHGROW (Algorithm 1, via the shared engine)
     # ------------------------------------------------------------------ #
-    def match_grow(self, jobspec: Jobspec, jobid: str) -> Optional[ResourceGraph]:
+    def match_grow(self, jobspec: Jobspec, jobid: str) -> GrowResult:
         """MG: grow ``jobid``'s allocation by ``jobspec``.
 
-        Returns the added subgraph (or the locally matched subgraph) on
-        success, None on failure.  Records an MGTiming either way.
+        Returns a :class:`GrowResult` (truthy on success) and records an
+        MGTiming either way.
         """
-        rec = MGTiming(level=self.name, jobid=jobid,
-                       request_size=jobspec.graph_size())
-        # 1. try locally (MATCHALLOCATE with grow semantics)
-        t0 = time.perf_counter()
-        matcher = Matcher(self.graph)
-        paths = matcher.match(jobspec)
-        rec.t_match = time.perf_counter() - t0
-        if paths is not None:
-            # RunGrow(sub, add=False): resources join the running job
-            self.graph.set_allocated(paths, jobid)
-            alloc = self.allocations.setdefault(jobid, Allocation(jobid))
-            alloc.paths.extend(paths)
-            sub = self.graph.extract(paths)
-            rec.matched_locally = True
-            rec.matched_size = sub.size
-            self.timings.append(rec)
-            return sub
-
-        # 2. forward up (or out) the hierarchy
-        tres = None
-        total_size = 0
-        if self.parent is not None:
-            t0 = time.perf_counter()
-            resp = self.parent.call("match_grow", pack_json(
-                {"jobspec": jobspec.to_dict(), "jobid": jobid}))
-            rec.t_comms = time.perf_counter() - t0
-            if resp:
-                # fused deserialize + AddSubgraph (RunGrow add=True)
-                t0 = time.perf_counter()
-                tres = splice_jgf(self.graph, json.loads(resp))
-                update_metadata(self.graph, tres, jobid=jobid)
-                rec.t_add_upd = time.perf_counter() - t0
-                total_size = tres.total_size
-        if tres is None and self.external is not None and (
-                self.parent is None or self.external_at_any_level):
-            root = self.graph.roots[0] if self.graph.roots else "/external"
-            result = self.external.provision(jobspec, root)
-            if result is not None:
-                rec.external = True
-                t0 = time.perf_counter()
-                tres = add_subgraph(self.graph, result.subgraph)
-                update_metadata(self.graph, tres, jobid=jobid)
-                rec.t_add_upd = time.perf_counter() - t0
-                total_size = result.subgraph.size
-        if tres is None:
-            self.timings.append(rec)
-            return None
-
-        rec.matched_size = total_size
-        rec.ancestors_updated = tres.ancestors_updated
-        alloc = self.allocations.setdefault(jobid, Allocation(jobid))
-        alloc.paths.extend(tres.new_paths)
-        if rec.external:
-            self.external_paths.extend(tres.new_paths)
-        self.timings.append(rec)
-        return SplicedSubgraph(total_size, tres.new_paths)
-
-    def _serve_match_grow(self, jobspec: Jobspec,
-                          jobid: str) -> Optional[bytes]:
-        """Parent-side MG service: match here (recursing upward on
-        failure), allocate to the child's job, and return the matched
-        subgraph as JGF BYTES.  A subgraph received from our own parent
-        is forwarded VERBATIM after splicing — the payload is encoded
-        exactly once at the level that matched, instead of once per
-        level (§Perf control-plane optimization beyond the paper)."""
-        rec = MGTiming(level=self.name, jobid=jobid,
-                       request_size=jobspec.graph_size())
-        t0 = time.perf_counter()
-        matcher = Matcher(self.graph)
-        paths = matcher.match(jobspec)
-        rec.t_match = time.perf_counter() - t0
-        if paths is not None:
-            self.graph.set_allocated(paths, jobid)
-            alloc = self.allocations.setdefault(jobid, Allocation(jobid))
-            alloc.paths.extend(paths)
-            sub = self.graph.extract(paths)
-            rec.matched_locally = True
-            rec.matched_size = sub.size
-            self.timings.append(rec)
-            return sub.to_jgf_bytes()
-        # recurse to our parent / external provider
-        resp = None
-        if self.parent is not None:
-            t0 = time.perf_counter()
-            resp = self.parent.call("match_grow", pack_json(
-                {"jobspec": jobspec.to_dict(), "jobid": jobid})) or None
-            rec.t_comms = time.perf_counter() - t0
-        if resp is not None:
-            t0 = time.perf_counter()
-            tres = splice_jgf(self.graph, json.loads(resp))
-            update_metadata(self.graph, tres, jobid=jobid)
-            rec.t_add_upd = time.perf_counter() - t0
-            rec.matched_size = tres.total_size
-            rec.ancestors_updated = tres.ancestors_updated
-            alloc = self.allocations.setdefault(jobid, Allocation(jobid))
-            alloc.paths.extend(tres.new_paths)
-            self.timings.append(rec)
-            return resp                       # verbatim pass-through
-        if self.external is not None:
-            root = self.graph.roots[0] if self.graph.roots else "/external"
-            result = self.external.provision(jobspec, root)
-            if result is not None:
-                rec.external = True
-                t0 = time.perf_counter()
-                tres = add_subgraph(self.graph, result.subgraph)
-                update_metadata(self.graph, tres, jobid=jobid)
-                rec.t_add_upd = time.perf_counter() - t0
-                rec.matched_size = result.subgraph.size
-                rec.ancestors_updated = tres.ancestors_updated
-                alloc = self.allocations.setdefault(jobid, Allocation(jobid))
-                alloc.paths.extend(tres.new_paths)
-                self.external_paths.extend(tres.new_paths)
-                self.timings.append(rec)
-                return result.subgraph.to_jgf_bytes()
-        self.timings.append(rec)
-        return None
+        return self.engine.grow(jobspec, jobid)
 
     # ------------------------------------------------------------------ #
     # MATCHSHRINK (subtractive, bottom-up)
@@ -298,6 +172,8 @@ class SchedulerInstance:
         free pool — unless they were external)."""
         if remove_vertices:
             res = remove_subgraph(self.graph, list(paths), jobid=jobid)
+            self.spliced_paths.difference_update(paths)
+            self.external_paths.difference_update(paths)
         else:
             self.graph.set_free(paths, jobid)
             res = TransformResult(kind=TransformKind.SUBTRACTIVE)
@@ -306,13 +182,22 @@ class SchedulerInstance:
             doomed = set(paths)
             alloc.paths = [p for p in alloc.paths
                            if p not in doomed and self.graph.get(p) is not None]
+            if not alloc.paths:
+                self.allocations.pop(jobid, None)
         if self.parent is not None:
             self.parent.call("release", pack_json(
                 {"jobid": jobid, "paths": list(paths)}))
         return res
 
     def release(self, jobid: str, paths: Optional[Sequence[str]] = None) -> None:
-        """Release an allocation (fully, or the given subset)."""
+        """Release an allocation (fully, or the given subset).
+
+        Local vertices return to the free pool.  External vertices and
+        vertices spliced in from above (which only existed here for
+        this job) are removed.  The release propagates bottom-up: the
+        parent frees its own copies in turn, all the way to the level
+        that originally matched the subgraph.
+        """
         alloc = self.allocations.get(jobid)
         if alloc is None:
             return
@@ -320,25 +205,55 @@ class SchedulerInstance:
         present = [p for p in target if p in self.graph]
         self.graph.set_free(present, jobid)
         # external vertices disappear when their job releases them
-        ext = [p for p in present if p in set(self.external_paths)]
+        ext = [p for p in present if p in self.external_paths]
         if ext:
             remove_subgraph(self.graph, ext, jobid=jobid)
-            eset = set(ext)
-            self.external_paths = [p for p in self.external_paths
-                                   if p not in eset]
+            self.external_paths.difference_update(ext)
+        # pass-through copies from parent/sibling grows likewise leave
+        # this graph instead of inflating the local free pool
+        spl = [p for p in present
+               if p in self.spliced_paths and p in self.graph]
+        if spl:
+            remove_subgraph(self.graph, spl, jobid=jobid)
+            self.spliced_paths.difference_update(spl)
         if paths is None:
             self.allocations.pop(jobid, None)
         else:
             doomed = set(target)
             alloc.paths = [p for p in alloc.paths if p not in doomed]
+            if not alloc.paths:     # don't retain a record per dead job
+                self.allocations.pop(jobid, None)
+        # propagate only when the release touched pass-through copies —
+        # an ancestor can hold state for exactly those; purely local
+        # jobs release without an RPC round trip per completion
+        if self.parent is not None and spl:
+            self.parent.call("release", pack_json(
+                {"jobid": jobid, "paths": target}))
 
 
 # ---------------------------------------------------------------------- #
-# hierarchy builder
+# hierarchy builders (chain and tree)
 # ---------------------------------------------------------------------- #
 @dataclass
+class TreeSpec:
+    """Declarative node of a scheduler-hierarchy tree.
+
+    ``socket=True`` links this node to its parent over the loopback
+    socket ("internode"); the default link is in-process ("intranode").
+    ``external`` attaches a provider to this node (the paper's external
+    resource specialization when the node is not the root).
+    """
+
+    graph: ResourceGraph
+    name: str = ""
+    children: List["TreeSpec"] = field(default_factory=list)
+    socket: bool = False
+    external: Optional[ExternalProvider] = None
+
+
+@dataclass
 class Hierarchy:
-    """A chain (or tree) of scheduler instances, leaf last."""
+    """A tree of scheduler instances, preorder (top first, leaf last)."""
 
     instances: List[SchedulerInstance]
 
@@ -349,6 +264,12 @@ class Hierarchy:
     @property
     def leaf(self) -> SchedulerInstance:
         return self.instances[-1]
+
+    def __getitem__(self, name: str) -> SchedulerInstance:
+        for inst in self.instances:
+            if inst.name == name:
+                return inst
+        raise KeyError(name)
 
     def close(self) -> None:
         for inst in self.instances:
@@ -361,11 +282,47 @@ class Hierarchy:
         return out
 
 
+def build_tree(spec: TreeSpec) -> Hierarchy:
+    """Build a scheduler-instance tree from a :class:`TreeSpec`.
+
+    Each child gets an upward transport to its parent, and the parent
+    gets a downward transport to the child (for sibling routing).  Both
+    directions use the socket regime when ``spec.socket`` is set.
+    """
+    instances: List[SchedulerInstance] = []
+    counter = itertools.count()
+
+    def _build(node: TreeSpec,
+               parent: Optional[SchedulerInstance]) -> SchedulerInstance:
+        name = node.name or f"L{next(counter)}"
+        parent_t: Optional[Transport] = None
+        if parent is not None:
+            if node.socket:
+                parent_t = SocketTransport(parent.serve())
+            else:
+                parent_t = parent.inproc_transport()
+        inst = SchedulerInstance(name, node.graph, parent=parent_t,
+                                 external=node.external)
+        if node.external is not None and parent is not None:
+            inst.external_at_any_level = True
+        instances.append(inst)
+        if parent is not None:
+            down: Transport = (SocketTransport(inst.serve()) if node.socket
+                               else inst.inproc_transport())
+            parent.add_child(name, down)
+        for child in node.children:
+            _build(child, inst)
+        return inst
+
+    _build(spec, None)
+    return Hierarchy(instances)
+
+
 def build_chain(graphs: List[ResourceGraph],
                 names: Optional[List[str]] = None,
                 socket_levels: Optional[Sequence[int]] = None,
                 external: Optional[ExternalProvider] = None) -> Hierarchy:
-    """Build a parent→child chain of instances.
+    """Build a parent→child chain of instances (a degenerate tree).
 
     ``graphs[0]`` is the top level.  ``socket_levels`` lists child indices
     whose link *to their parent* uses the loopback socket ("internode");
@@ -374,18 +331,11 @@ def build_chain(graphs: List[ResourceGraph],
     """
     names = names or [f"L{i}" for i in range(len(graphs))]
     socket_levels = set(socket_levels or ())
-    instances: List[SchedulerInstance] = []
-    for i, g in enumerate(graphs):
-        parent_t: Optional[Transport] = None
-        if i > 0:
-            parent_inst = instances[i - 1]
-            if i in socket_levels:
-                addr = parent_inst.serve()
-                parent_t = SocketTransport(addr)
-            else:
-                parent_t = parent_inst.inproc_transport()
-        inst = SchedulerInstance(
-            names[i], g, parent=parent_t,
-            external=external if i == 0 else None)
-        instances.append(inst)
-    return Hierarchy(instances)
+    spec: Optional[TreeSpec] = None
+    for i in range(len(graphs) - 1, -1, -1):
+        spec = TreeSpec(graph=graphs[i], name=names[i],
+                        socket=i in socket_levels,
+                        external=external if i == 0 else None,
+                        children=[spec] if spec is not None else [])
+    assert spec is not None
+    return build_tree(spec)

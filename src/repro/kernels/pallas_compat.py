@@ -1,0 +1,16 @@
+"""Pallas TPU API compatibility.
+
+jax 0.4.x names the TPU compiler options ``TPUCompilerParams``; newer
+releases renamed it to ``CompilerParams``.  Kernels import the alias
+from here so the rename is handled in exactly one place.
+"""
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # fail at import, not deep inside pallas_call
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is not supported by the "
+        "Pallas kernels (known-good: 0.4.x with TPUCompilerParams, "
+        ">=0.5 with CompilerParams)")

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .pallas_compat import CompilerParams as _CompilerParams
+
 
 def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
                       y_ref, state_ref, decay_ref, *, chunk: int):
@@ -103,7 +105,7 @@ def ssd_chunk_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
             jax.ShapeDtypeStruct((b, nc, H, N, P), jnp.float32),
             jax.ShapeDtypeStruct((b, nc, H), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=(
+        compiler_params=_CompilerParams(dimension_semantics=(
             "parallel", "parallel", "parallel")),
         interpret=interpret,
     )(x.reshape(b, nc * chunk, H, P),

@@ -23,7 +23,9 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from ..parallel.sharding import ShardingCtx, constrain
+
+from ..parallel.sharding import (ShardingCtx, constrain,
+                                shard_map_compat as _shard_map)
 from .config import ArchConfig
 from .layers import ParamSpec, rmsnorm
 
@@ -268,12 +270,12 @@ def moe_a2a(x: jax.Array, p: Dict, cfg: ArchConfig, ctx: ShardingCtx) -> jax.Arr
     else:
         wu_spec = w_spec
         wd_spec = ctx.rules.spec("expert", None, None)
-    y = jax.shard_map(
+    y = _shard_map(
         local_moe, mesh=mesh,
         in_specs=(x_spec, r_spec,
                   wu_spec, wu_spec,
                   wd_spec, n_spec),
-        out_specs=x_spec, check_vma=False,
+        out_specs=x_spec,
     )(x, p["router"], p["w_up"], p["w_gate"], p["w_down"], p["norm"])
     if cfg.moe_shared:
         # stay 3-D: reshaping [b->data, s->model, e] to [(b s), e] merges

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .sharding import shard_map_compat as _shard_map
+
 
 def quantize_int8(x: jax.Array, key: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Per-last-axis-row int8 quantization with stochastic rounding."""
@@ -63,9 +65,9 @@ def compressed_psum(grads: Any, key: jax.Array, mesh,
             return (total.astype(jnp.float32) * gmax / n).astype(gl.dtype)
 
         spec = P()  # gradients replicated over the pod axis
-        return jax.shard_map(
-            inner, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
-            check_vma=False)(g, k)
+        return _shard_map(
+            inner, mesh=mesh, in_specs=(spec, spec),
+            out_specs=spec)(g, k)
 
     out = [reduce_leaf(g, k) for g, k in zip(flat, keys)]
     return jax.tree_util.tree_unflatten(treedef, out)

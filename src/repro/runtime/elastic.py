@@ -133,7 +133,7 @@ class ElasticRuntime:
         before = self.chips_allocated()
         js = Jobspec(resources=[ResourceReq(self.chip_type, chips)])
         sub = self.scheduler.match_grow(js, self.jobid)
-        if sub is None:
+        if not sub:
             return False
         self.events.append(ElasticEvent(
             "grow", time.time(), before, self.chips_allocated(),
@@ -183,7 +183,7 @@ class ElasticRuntime:
         ok = True
         if replace and lost:
             js = Jobspec(resources=[ResourceReq(self.chip_type, len(lost))])
-            ok = self.scheduler.match_grow(js, self.jobid) is not None
+            ok = bool(self.scheduler.match_grow(js, self.jobid))
         self.bind()
         return ok
 

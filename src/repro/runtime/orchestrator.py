@@ -1,26 +1,33 @@
-"""KubeFlux-style orchestrator: replica sets over the graph scheduler.
+"""KubeFlux-style orchestrator: replica sets over the job queue.
 
 The paper's third capability — scheduling cloud-orchestration-framework
-tasks — as a first-class controller:
+tasks — as a first-class controller, reconciled *through the job
+lifecycle queue* (``core/queue.py``) rather than by calling the
+scheduler directly:
 
 * a ``ReplicaSet`` declares a pod-sized jobspec and a desired replica
-  count; the controller reconciles actual vs desired through
-  MATCHALLOCATE (first replica) and MATCHGROW/SHRINK (scaling),
+  count; every replica is a queue ``Job`` bound to the replica set's
+  single scheduler allocation (``alloc_id``), so scale-up is a submit
+  (MATCHALLOCATE for the first replica, MATCHGROW after) and scale-down
+  is a cancel (the queue's timed-release path: ``release`` /
+  ``match_shrink``),
 * a ``BurstPolicy`` decides when scaling may spill to the External API
   (the paper notes Slurm/LSF gate bursting behind static cluster-wide
   config; here it is a per-replica-set policy object, and per-USER
   provider specialization falls out of attaching the provider to the
-  user's own scheduler instance),
+  user's own scheduler instance) — the external-burst path rides the
+  queue's grow escalation,
 * utilization-driven autoscaling (scale on a load signal between
   min/max replicas).
 """
 from __future__ import annotations
 
-import time
+import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from ..core.jobspec import Jobspec
+from ..core.queue import JobQueue, JobState
 from ..core.scheduler import SchedulerInstance
 
 
@@ -55,11 +62,14 @@ class ReplicaSet:
 
 
 class Orchestrator:
-    """Reconciles replica sets against a scheduler instance."""
+    """Reconciles replica sets against a scheduler, via a JobQueue."""
 
-    def __init__(self, scheduler: SchedulerInstance):
+    def __init__(self, scheduler: SchedulerInstance,
+                 queue: Optional[JobQueue] = None):
         self.scheduler = scheduler
+        self.queue = queue or JobQueue(scheduler, allow_grow=True)
         self.replica_sets: Dict[str, ReplicaSet] = {}
+        self._replica_seq = itertools.count()
 
     def create(self, rs: ReplicaSet) -> ReplicaSet:
         self.replica_sets[rs.name] = rs
@@ -69,31 +79,38 @@ class Orchestrator:
     # ------------------------------------------------------------ #
     def reconcile(self, name: str) -> int:
         """Drive actual replicas toward desired.  Returns the delta
-        applied.  Scale-up prefers local resources; external bursting is
-        gated by the policy.  Scale-down releases the newest replicas
-        first (external ones before local, so cloud cost drains first)."""
+        applied.  Scale-up submits one queue job per missing replica
+        (local resources preferred; external bursting gated by the
+        policy).  Scale-down cancels the newest replica jobs first
+        (external ones before local, so cloud cost drains first)."""
         rs = self.replica_sets[name]
         applied = 0
-        # scale up
+        # scale up: one queue job per replica, sharing rs.jobid's
+        # allocation; the queue runs MA for the first and MG after
         while rs.replicas < rs.desired:
             external_before = len(self.scheduler.external_paths)
-            if rs.replicas == 0:
-                got = self.scheduler.match_allocate(rs.pod_spec,
-                                                    jobid=rs.jobid)
-                ok = got is not None
-            else:
-                # bursting allowed? temporarily detach the provider if not
-                provider = self.scheduler.external
-                if provider is not None and not rs.policy.may_burst(
+            # the first replica is pure MATCHALLOCATE (grow=False:
+            # strictly local); later replicas MATCHGROW the allocation
+            first = rs.replicas == 0
+            # bursting allowed? temporarily detach the provider if not
+            provider = self.scheduler.external
+            if provider is not None and not first and \
+                    not rs.policy.may_burst(
                         rs.replicas - rs.external_replicas,
                         rs.external_replicas):
-                    self.scheduler.external = None
-                try:
-                    ok = self.scheduler.match_grow(rs.pod_spec,
-                                                   rs.jobid) is not None
-                finally:
-                    self.scheduler.external = provider
-            if not ok:
+                self.scheduler.external = None
+            try:
+                # dispatch, not submit+step: the reconciler must not be
+                # wedged behind an unrelated blocked job at the head of
+                # a shared queue
+                job = self.queue.dispatch(
+                    rs.pod_spec, walltime=None, alloc_id=rs.jobid,
+                    jobid=f"{rs.jobid}-r{next(self._replica_seq)}",
+                    grow=not first)
+            finally:
+                self.scheduler.external = provider
+            if job.state is not JobState.RUNNING:
+                self.queue.cancel(job.jobid)
                 rs.events.append(f"scale-up blocked at {rs.replicas}")
                 break
             burst = len(self.scheduler.external_paths) > external_before
@@ -102,17 +119,16 @@ class Orchestrator:
             rs.events.append(
                 f"scaled to {rs.replicas}" + (" (burst)" if burst else ""))
             applied += 1
-        # scale down
+        # scale down: cancel the newest replica jobs (external last in,
+        # first out — cloud cost drains before local capacity)
         while rs.replicas > rs.desired:
-            per_pod = sum(r.total_vertices() for r in rs.pod_spec.resources)
-            alloc = self.scheduler.allocations.get(rs.jobid)
-            if alloc is None or len(alloc.paths) < per_pod:
+            jobs = self.queue.running_for(rs.jobid)
+            if not jobs:
                 break
-            victims = alloc.paths[-per_pod:]
-            g = self.scheduler.graph
-            was_external = any(p in set(self.scheduler.external_paths)
-                               for p in victims)
-            self.scheduler.release(rs.jobid, victims)
+            victim = jobs[-1]
+            was_external = any(p in self.scheduler.external_paths
+                               for p in victim.paths)
+            self.queue.cancel(victim.jobid)
             rs.replicas -= 1
             if was_external:
                 rs.external_replicas = max(rs.external_replicas - 1, 0)

@@ -1,10 +1,20 @@
-"""Graph data-model tests: invariants, localization, JGF, hypothesis."""
-import hypothesis.strategies as st
+"""Graph data-model tests: invariants, localization, JGF, hypothesis.
+
+The property-based tests need ``hypothesis``; a bare checkout without
+it still collects and runs the deterministic tests below — the
+property tests are only defined when the dependency is available.
+"""
 import pytest
-from hypothesis import given, settings
 
 from repro.core import (ResourceGraph, Vertex, add_subgraph, build_cluster,
                         build_tpu_fleet, remove_subgraph, update_metadata)
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAS_HYPOTHESIS = True
+except ImportError:      # optional dependency: property tests skipped
+    HAS_HYPOTHESIS = False
 
 
 def test_build_cluster_shapes():
@@ -82,68 +92,70 @@ def test_alloc_free_aggregates():
     assert g.validate_tree()
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.tuples(st.booleans(), st.integers(0, 63)),
-                min_size=1, max_size=40))
-def test_aggregates_invariant_under_random_alloc_free(ops):
-    """Property: after any alloc/free sequence the pruning aggregates
-    match a from-scratch recomputation (validate_tree checks both the
-    forest structure and the aggregate bookkeeping)."""
-    g = build_cluster(nodes=2, sockets_per_node=2, cores_per_socket=16)
-    cores = sorted(g.by_type("core"))
-    for alloc, idx in ops:
-        core = cores[idx]
-        if alloc:
-            g.set_allocated([core], f"job{idx}")
-        else:
-            g.set_free([core], f"job{idx}")
-    assert g.validate_tree()
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.booleans(), st.integers(0, 63)),
+                    min_size=1, max_size=40))
+    def test_aggregates_invariant_under_random_alloc_free(ops):
+        """Property: after any alloc/free sequence the pruning aggregates
+        match a from-scratch recomputation (validate_tree checks both the
+        forest structure and the aggregate bookkeeping)."""
+        g = build_cluster(nodes=2, sockets_per_node=2, cores_per_socket=16)
+        cores = sorted(g.by_type("core"))
+        for alloc, idx in ops:
+            core = cores[idx]
+            if alloc:
+                g.set_allocated([core], f"job{idx}")
+            else:
+                g.set_free([core], f"job{idx}")
+        assert g.validate_tree()
 
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 8))
+    def test_add_remove_roundtrip(nodes, sockets, cores):
+        """Property: adding then removing an external subgraph restores the
+        original vertex set and aggregates."""
+        g = build_cluster(nodes=2)
+        before = set(g.paths())
+        ext = build_cluster(nodes=nodes, sockets_per_node=sockets,
+                            cores_per_socket=cores, node_prefix="burst")
+        sub = ext.extract([p for p in ext.paths() if "burst" in p])
+        res = add_subgraph(g, sub)
+        update_metadata(g, res, jobid="burst-job")
+        assert g.validate_tree()
+        remove_subgraph(g, res.new_paths, jobid="burst-job")
+        assert set(g.paths()) == before
+        assert g.validate_tree()
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 8))
-def test_add_remove_roundtrip(nodes, sockets, cores):
-    """Property: adding then removing an external subgraph restores the
-    original vertex set and aggregates."""
-    g = build_cluster(nodes=2)
-    before = set(g.paths())
-    ext = build_cluster(nodes=nodes, sockets_per_node=sockets,
-                        cores_per_socket=cores, node_prefix="burst")
-    sub = ext.extract([p for p in ext.paths() if "burst" in p])
-    res = add_subgraph(g, sub)
-    update_metadata(g, res, jobid="burst-job")
-    assert g.validate_tree()
-    remove_subgraph(g, res.new_paths, jobid="burst-job")
-    assert set(g.paths()) == before
-    assert g.validate_tree()
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 3), st.integers(1, 2), st.integers(1, 8),
-       st.integers(2, 4))
-def test_matcher_satisfies_request_structure(nodes, sockets, cores,
-                                             cluster_nodes):
-    """Property: a successful match contains exactly the requested
-    number of vertices of each type, all free before and allocated
-    after, and nested resources sit under their parents."""
-    from repro.core import Jobspec, SchedulerInstance
-    g = build_cluster(nodes=cluster_nodes)
-    sched = SchedulerInstance("L0", g)
-    js = Jobspec.hpc(nodes=nodes, sockets=max(sockets * nodes, nodes),
-                     cores=max(cores * sockets * nodes, nodes))
-    alloc = sched.match_allocate(js, jobid="j")
-    if alloc is None:
-        return  # unsatisfiable request: nothing to check
-    types = {}
-    for p in alloc.paths:
-        v = g.vertex(p)
-        types[v.type] = types.get(v.type, 0) + 1
-        assert v.allocations.get("j") is not None
-    assert types.get("node", 0) == nodes
-    # every matched core sits under a matched socket under a matched node
-    matched = set(alloc.paths)
-    for p in alloc.paths:
-        if g.vertex(p).type == "core":
-            par = g.parent(p)
-            assert par in matched and g.vertex(par).type == "socket"
-    assert g.validate_tree()
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 3), st.integers(1, 2), st.integers(1, 8),
+           st.integers(2, 4))
+    def test_matcher_satisfies_request_structure(nodes, sockets, cores,
+                                                 cluster_nodes):
+        """Property: a successful match contains exactly the requested
+        number of vertices of each type, all free before and allocated
+        after, and nested resources sit under their parents."""
+        from repro.core import Jobspec, SchedulerInstance
+        g = build_cluster(nodes=cluster_nodes)
+        sched = SchedulerInstance("L0", g)
+        js = Jobspec.hpc(nodes=nodes, sockets=max(sockets * nodes, nodes),
+                         cores=max(cores * sockets * nodes, nodes))
+        alloc = sched.match_allocate(js, jobid="j")
+        if alloc is None:
+            return  # unsatisfiable request: nothing to check
+        types = {}
+        for p in alloc.paths:
+            v = g.vertex(p)
+            types[v.type] = types.get(v.type, 0) + 1
+            assert v.allocations.get("j") is not None
+        assert types.get("node", 0) == nodes
+        # every matched core sits under a matched socket under a node
+        matched = set(alloc.paths)
+        for p in alloc.paths:
+            if g.vertex(p).type == "core":
+                par = g.parent(p)
+                assert par in matched and g.vertex(par).type == "socket"
+        assert g.validate_tree()
+else:
+    def test_property_tests_skipped_without_hypothesis():
+        pytest.skip("hypothesis not installed; property tests not defined")

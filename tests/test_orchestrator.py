@@ -77,3 +77,42 @@ def test_scale_down_drains_external_first():
     orch.reconcile("drain")
     assert rs.replicas == 4
     assert rs.external_replicas < ext_before
+
+
+def test_reconcile_not_wedged_behind_blocked_queue_head():
+    """A shared queue whose head is an unrelated, unsatisfiable batch
+    job must not block replica scale-up (dispatch, not head-of-line)."""
+    from repro.core import JobQueue, SimClock
+    sched = _sched(nodes=2, cores=8)
+    q = JobQueue(sched, clock=SimClock(), backfill=True)
+    q.submit(Jobspec.hpc(nodes=10, sockets=20, cores=160), walltime=10.0)
+    q.step()    # head cannot start: 10 nodes on a 2-node cluster
+    orch = Orchestrator(sched, queue=q)
+    rs = orch.create(ReplicaSet("web", POD, desired=3))
+    assert rs.replicas == 3
+    assert len(sched.allocations[rs.jobid].paths) == 12
+
+
+def test_first_replica_is_local_only():
+    """The first replica is pure MATCHALLOCATE: it must not escalate
+    through the hierarchy even when a parent has room."""
+    from repro.core import build_chain, build_cluster
+    h = build_chain([build_cluster(nodes=2), build_cluster(nodes=1)])
+    try:
+        leaf = h.leaf
+        # leaf fully allocated: no local room for even one pod
+        leaf.match_allocate(Jobspec.hpc(nodes=1, sockets=2, cores=32),
+                            jobid="hog")
+        orch = Orchestrator(leaf)
+        rs = orch.create(ReplicaSet("web", POD, desired=2))
+        assert rs.replicas == 0
+        assert any("blocked at 0" in e for e in rs.events)
+        # later replicas MAY escalate: free the leaf, first goes local,
+        # the rest grow through the parent
+        leaf.release("hog")
+        rs.desired = 10
+        orch.reconcile("web")
+        assert rs.replicas == 10
+        assert any(t.level == "L0" for t in h.top.timings)
+    finally:
+        h.close()

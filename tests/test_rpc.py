@@ -34,3 +34,32 @@ def test_json_helpers():
     d = {"jobspec": {"resources": [{"type": "core", "count": 4}]}}
     assert unpack_json(pack_json(d)) == d
     assert unpack_json(b"") == {}
+
+
+def test_method_registry_dispatch():
+    from repro.core.rpc import MethodRegistry
+    reg = MethodRegistry()
+    reg.register("echo", lambda p: p)
+    reg.register("rev", lambda p: p[::-1])
+    assert "echo" in reg and reg.methods() == ("echo", "rev")
+    assert reg("echo", b"x") == b"x"
+    assert reg("rev", b"ab") == b"ba"
+    with pytest.raises(ValueError, match="unknown RPC method"):
+        reg("nope", b"")
+    reg.unregister("rev")
+    assert "rev" not in reg
+
+
+def test_scheduler_registers_methods_and_extension():
+    from repro.core import SchedulerInstance, build_cluster
+    from repro.core.rpc import pack_json, unpack_json
+    inst = SchedulerInstance("s", build_cluster(nodes=1))
+    assert {"match_grow", "release", "reclaim"} <= set(inst.methods.methods())
+    inst.register_method(
+        "status", lambda p: pack_json({"free": inst.graph.vertex(
+            inst.graph.roots[0]).agg_free}))
+    t = inst.inproc_transport()
+    out = unpack_json(t.call("status", b""))
+    assert out["free"]["core"] == 32
+    with pytest.raises(ValueError):
+        t.call("bogus", b"")

@@ -39,7 +39,7 @@ def test_match_grow_local():
                                  jobid="j")
     assert alloc
     sub = sched.match_grow(Jobspec.hpc(nodes=1, sockets=2, cores=32), "j")
-    assert sub is not None
+    assert sub and sub.via == "local"
     rec = sched.timings[-1]
     assert rec.matched_locally and rec.t_comms == 0
     # all resources joined the SAME job
@@ -59,7 +59,8 @@ def test_nested_match_grow_chain():
                 jobid="init")
         sub = leaf.match_grow(Jobspec.hpc(nodes=1, sockets=2, cores=32),
                               "init")
-        assert sub is not None
+        assert sub and sub.via == "parent"
+
         # the leaf's graph grew by the matched subgraph
         assert len(leaf.graph.by_type("node")) == 2
         assert leaf.graph.validate_tree()
@@ -91,7 +92,7 @@ def test_external_burst_ec2():
     sched.match_allocate(Jobspec.hpc(nodes=1, sockets=2, cores=32),
                          jobid="j")
     sub = sched.match_grow(Jobspec.instances("t2.2xlarge", 2), "j")
-    assert sub is not None
+    assert sub and sub.via == "external"
     assert sched.timings[-1].external
     assert len(sched.graph.by_type("zone")) >= 1  # zone interposition
     # E_i bookkeeping: external resources tracked separately
@@ -120,7 +121,7 @@ def test_external_specialization_at_child_level():
         before_parent = set(h.top.graph.paths())
         sub = child.match_grow(
             Jobspec(resources=[ResourceReq("node", 1)]), "j")
-        assert sub is not None and child.timings[-1].external
+        assert sub and child.timings[-1].external
         assert set(h.top.graph.paths()) == before_parent
     finally:
         h.close()
@@ -134,7 +135,7 @@ def test_grow_then_release_returns_to_parent_pool():
         leaf.match_allocate(Jobspec.hpc(nodes=1, sockets=2, cores=32),
                             jobid="j")
         sub = leaf.match_grow(Jobspec.hpc(nodes=1, sockets=2, cores=32), "j")
-        assert sub is not None
+        assert sub
         # parent allocated the resources to the child's job
         parent_alloc = h.top.allocations.get("j")
         assert parent_alloc and parent_alloc.paths
@@ -145,3 +146,80 @@ def test_grow_then_release_returns_to_parent_pool():
         assert all(not g.vertex(p).allocations for p in freed)
     finally:
         h.close()
+
+
+def test_match_shrink_release_rpc_over_socket():
+    """Bottom-up shrink over the internode regime: the leaf's shrink
+    sends the release RPC through the SocketTransport to its parent,
+    which returns the vertices to its free pool."""
+    graphs = [build_cluster(nodes=2), build_cluster(nodes=1)]
+    h = build_chain(graphs, socket_levels=[1])   # leaf->parent: socket
+    try:
+        leaf, top = h.leaf, h.top
+        leaf.match_allocate(Jobspec.hpc(nodes=1, sockets=2, cores=32),
+                            jobid="j")
+        sub = leaf.match_grow(Jobspec.hpc(nodes=1, sockets=2, cores=32),
+                              "j")
+        assert sub and sub.via == "parent"
+        held = [p for p in top.allocations["j"].paths]
+        assert held
+        leaf.match_shrink("j", sub.paths(), remove_vertices=True)
+        # the release RPC crossed the socket: parent freed the vertices
+        for p in held:
+            if p in top.graph:
+                assert not top.graph.vertex(p).allocations
+        assert all(p not in leaf.graph for p in sub.paths())
+        assert leaf.graph.validate_tree() and top.graph.validate_tree()
+    finally:
+        h.close()
+
+
+def test_grow_then_shrink_invariants_every_transform():
+    """validate_tree() holds after EVERY transform in a grow/shrink
+    churn sequence, at every level of the hierarchy."""
+    graphs = [build_cluster(nodes=4), build_cluster(nodes=1)]
+    h = build_chain(graphs, socket_levels=[1])
+    try:
+        leaf, top = h.leaf, h.top
+
+        def check():
+            assert leaf.graph.validate_tree()
+            assert top.graph.validate_tree()
+
+        leaf.match_allocate(Jobspec.hpc(nodes=1, sockets=2, cores=32),
+                            jobid="j")
+        check()
+        grown = []
+        for _ in range(3):
+            sub = leaf.match_grow(
+                Jobspec.hpc(nodes=1, sockets=2, cores=32), "j")
+            assert sub
+            grown.append(sub.paths())
+            check()
+        # shrink back in reverse order, one grow at a time
+        for paths in reversed(grown):
+            leaf.match_shrink("j", paths, remove_vertices=True)
+            check()
+        # the leaf is back to its own single node
+        assert len(leaf.graph.by_type("node")) == 1
+        # the parent's pool is fully free again
+        freed = [p for p in top.graph.paths() if "/node" in p]
+        assert all(not top.graph.vertex(p).allocations for p in freed)
+    finally:
+        h.close()
+
+
+def test_release_external_paths_subset():
+    """Partial release with external resources present: only the
+    released subset of E_i disappears (set bookkeeping, not O(n^2))."""
+    g = build_cluster(nodes=1)
+    sched = SchedulerInstance("top", g, external=SimulatedEC2Provider())
+    sched.match_allocate(Jobspec.hpc(nodes=1, sockets=2, cores=32), "j")
+    s1 = sched.match_grow(Jobspec.instances("t2.small", 1), "j")
+    s2 = sched.match_grow(Jobspec.instances("t2.small", 1), "j")
+    assert s1 and s2
+    assert isinstance(sched.external_paths, set)
+    before = set(sched.external_paths)
+    sched.release("j", s1.paths())
+    assert sched.external_paths == before - set(s1.paths())
+    assert sched.graph.validate_tree()
