@@ -14,7 +14,7 @@ from typing import Dict, List
 
 from repro.core import Jobspec, build_chain, build_cluster
 
-from .common import emit, print_table, summarize
+from .common import emit, print_table, summarize, timeit
 
 # Table 1: (nodes, sockets, cores) and the paper's request graph size
 TESTS = {
@@ -29,6 +29,49 @@ TESTS = {
 }
 
 LEVELS = [(128, "L0"), (8, "L1"), (4, "L2"), (2, "L3"), (1, "L4")]
+
+
+def bench_rpc_roundtrip(repeat: int = 200) -> List[Dict]:
+    """Persistent pooled connection vs dialing per call, per payload
+    size — the delta the SocketTransport connection pool buys on every
+    internode hop (ROADMAP "connection pooling")."""
+    from repro.core.rpc import RPCServer, SocketTransport
+
+    rows: List[Dict] = []
+    srv = RPCServer(lambda m, p: p)
+    try:
+        pooled = SocketTransport(srv.address)
+        try:
+            for label, payload in (("64B", b"x" * 64),
+                                   ("64KiB", b"x" * 65536)):
+                persistent = timeit(
+                    lambda: pooled.call("echo", payload), repeat=repeat)
+
+                def dial_call():
+                    t = SocketTransport(srv.address)
+                    try:
+                        t.call("echo", payload)
+                    finally:
+                        t.close()
+
+                dialing = timeit(dial_call, repeat=repeat)
+                rows.append({
+                    "payload": label,
+                    "persistent_mean": persistent["mean"],
+                    "persistent_p50": persistent["median"],
+                    "dial_mean": dialing["mean"],
+                    "dial_p50": dialing["median"],
+                    "speedup": dialing["mean"] / persistent["mean"],
+                })
+        finally:
+            pooled.close()
+    finally:
+        srv.close()
+    print_table("RPC round-trip: pooled persistent vs dial-per-call",
+                rows, ["payload", "persistent_mean", "dial_mean",
+                       "speedup"])
+    emit("rpc_roundtrip", rows)
+    return rows
 
 
 def build_hierarchy():
@@ -101,6 +144,7 @@ def run(repeat: int = 100, tests: List[str] = None) -> List[Dict]:
                  "comms_mean", "add_upd_mean"])
     emit("nested_mg", rows)
     emit("nested_mg_raw", raw)
+    bench_rpc_roundtrip(repeat=max(repeat * 2, 50))
     return rows
 
 

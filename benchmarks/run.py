@@ -13,8 +13,11 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced repeat counts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="alias for --quick (CI smoke lane)")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
+    args.quick = args.quick or args.smoke
     repeat = 10 if args.quick else 100
     repeat_small = 5 if args.quick else 20
 
@@ -45,6 +48,11 @@ def main() -> int:
     print("# queue churn — workload-trace replay at 3 hierarchy depths")
     from . import trace_replay
     trace_replay.run(n_jobs=60 if args.quick else 200)
+
+    print("#" * 72)
+    print("# scheduling policies — one contended trace x "
+          "{easy, conservative, firstfit, preempt}")
+    trace_replay.run_policies(n_jobs=120 if args.quick else 300)
 
     if not args.skip_roofline:
         print("#" * 72)

@@ -1,18 +1,28 @@
 """Workload-trace replay: submit/complete churn through the job queue.
 
-Replays a synthetic job trace (Poisson-ish arrivals, mixed request
-sizes, finite walltimes) through ``core/queue.py`` at three hierarchy
-depths (1 / 3 / 5 scheduler levels).  The queue runs on a SimClock with
-timed release enabled, EASY backfill on, and grow escalation so jobs
-that do not fit the leaf pull resources down the chain — every MG on
-the way records its t_match / t_comms / t_add_upd components.
+Two modes:
 
-Reported per depth: submit→start latency (mean / p50 / max, in sim
-seconds), utilization (busy vertex-time over capacity vertex-time),
-completed-job count, wall-clock replay cost, and the summed t_MG
-components across all levels.
+* **depth sweep** (default) — replays a synthetic job trace
+  (Poisson-ish arrivals, mixed request sizes, finite walltimes)
+  through ``core/queue.py`` at three hierarchy depths (1 / 3 / 5
+  scheduler levels).  The queue runs on a SimClock with timed release
+  enabled, EASY backfill on, and grow escalation so jobs that do not
+  fit the leaf pull resources down the chain — every MG on the way
+  records its t_match / t_comms / t_add_upd components.
+* **policy comparison** (``--policies``) — replays ONE identical
+  contended trace under each scheduling policy ({easy, conservative,
+  firstfit, preempt}; see ``core/policy.py``) on a single over-
+  subscribed instance, and reports throughput, mean/p50 wait split by
+  priority class, preemption counts, and makespan.  Results land in
+  ``experiments/bench/policy_compare.json``.  The headline check: the
+  preemptive-priority policy must buy high-priority jobs a lower mean
+  wait than EASY on the same trace.
 
   PYTHONPATH=src python -m benchmarks.trace_replay [--quick]
+  PYTHONPATH=src python -m benchmarks.trace_replay --policies [--jobs N]
+
+``--jobs 10000 --policies`` is the scheduled scale run CI records the
+perf trajectory with (see .github/workflows/ci.yml).
 """
 from __future__ import annotations
 
@@ -23,7 +33,7 @@ import time
 from typing import Dict, List
 
 from repro.core import (Hierarchy, Jobspec, JobQueue, SimClock, build_chain,
-                        build_cluster)
+                        build_cluster, make_policy)
 
 from .common import emit, print_table
 
@@ -117,6 +127,108 @@ def replay(depth: int, trace: List[Dict]) -> Dict:
         h.close()
 
 
+# ---------------------------------------------------------------------- #
+# policy comparison (--policies)
+# ---------------------------------------------------------------------- #
+POLICY_SET = ["easy", "conservative", "firstfit", "preempt"]
+
+
+def make_contended_trace(n_jobs: int, seed: int = 0,
+                         rate: float = 0.3) -> List[Dict]:
+    """Contended mix for policy comparison: arrivals near the 4-node
+    cluster's service rate (offered load ~1.1x at the default
+    ``rate``), 25% high-priority node-sized jobs, the rest low-priority
+    preemptible filler of varied widths — so the policies genuinely
+    diverge (queues build up, reservations bind, preemption has victims
+    to choose from) while the backlog stays bounded enough that a
+    10k-job replay finishes in minutes."""
+    rng = random.Random(seed)
+    t = 0.0
+    trace = []
+    for _ in range(n_jobs):
+        t += rng.expovariate(rate)
+        hi = rng.random() < 0.25
+        if hi:
+            nodes = rng.choice([1, 2])
+            spec = Jobspec.hpc(nodes=nodes, sockets=2 * nodes,
+                               cores=32 * nodes)
+            walltime = rng.uniform(5.0, 15.0)
+            priority, preemptible = 5, False
+        else:
+            sockets = rng.choice([1, 2])
+            spec = Jobspec.hpc(nodes=0, sockets=sockets,
+                               cores=rng.choice([8, 16]))  # per socket
+            walltime = rng.uniform(10.0, 40.0)
+            priority, preemptible = 0, True
+        trace.append({"arrival": t, "jobspec": spec, "walltime": walltime,
+                      "priority": priority, "preemptible": preemptible})
+    return trace
+
+
+def replay_policy(policy_name: str, trace: List[Dict],
+                  nodes: int = 4) -> Dict:
+    """One policy over one trace on a single over-subscribed instance."""
+    from repro.core import SchedulerInstance
+
+    g = build_cluster(nodes=nodes)
+    sched = SchedulerInstance(f"pc-{policy_name}", g)
+    clock = SimClock()
+    q = JobQueue(sched, clock=clock, policy=make_policy(policy_name))
+    t0 = time.perf_counter()
+    for entry in trace:
+        q.advance(max(entry["arrival"] - clock.now(), 0.0))
+        q.submit(entry["jobspec"], walltime=entry["walltime"],
+                 priority=entry["priority"],
+                 preemptible=entry["preemptible"])
+        q.step()
+    q.drain()
+    wall = time.perf_counter() - t0
+    s = q.stats()
+    assert s.completed == s.submitted, \
+        f"{policy_name}: {s.submitted - s.completed} jobs never ran"
+    assert sched.allocations == {}, f"{policy_name}: leaked allocations"
+    assert g.validate_tree(), policy_name
+    hi = [j.wait_time for j in q.completed if j.priority > 0]
+    lo = [j.wait_time for j in q.completed if j.priority == 0]
+    return {
+        "policy": policy_name,
+        "jobs": s.submitted,
+        "completed": s.completed,
+        "throughput_jobs_per_s": s.completed / s.makespan,
+        "wait_mean_s": s.mean_wait,
+        "wait_p50_s": s.p50_wait,
+        "wait_hi_mean_s": sum(hi) / len(hi) if hi else 0.0,
+        "wait_lo_mean_s": sum(lo) / len(lo) if lo else 0.0,
+        "preemptions": s.preemptions,
+        "mean_requeue_wait_s": s.mean_requeue_wait,
+        "utilization": s.utilization,
+        "makespan_s": s.makespan,
+        "replay_wall_s": wall,
+    }
+
+
+def run_policies(n_jobs: int = 300, seed: int = 0,
+                 policies: List[str] = None) -> List[Dict]:
+    policies = policies or POLICY_SET
+    rows = []
+    for name in policies:
+        trace = make_contended_trace(n_jobs, seed=seed)  # identical trace
+        rows.append(replay_policy(name, trace))
+    print_table(
+        "policy comparison (one contended trace, 4 policies)", rows,
+        ["policy", "completed", "throughput_jobs_per_s", "wait_mean_s",
+         "wait_hi_mean_s", "wait_lo_mean_s", "preemptions", "makespan_s"])
+    emit("policy_compare", rows)
+    by = {r["policy"]: r for r in rows}
+    if "easy" in by and "preempt" in by:
+        d = by["easy"]["wait_hi_mean_s"] - by["preempt"]["wait_hi_mean_s"]
+        print(f"\npreempt vs easy, high-priority mean wait: "
+              f"{by['preempt']['wait_hi_mean_s']:.2f}s vs "
+              f"{by['easy']['wait_hi_mean_s']:.2f}s "
+              f"({'-' if d >= 0 else '+'}{abs(d):.2f}s)")
+    return rows
+
+
 def run(n_jobs: int = 200, seed: int = 0) -> List[Dict]:
     rows = []
     for depth in sorted(DEPTH_LEVELS):
@@ -139,7 +251,16 @@ def main(argv=None) -> int:
                     help="reduced trace length")
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policies", action="store_true",
+                    help="replay one contended trace under "
+                         f"{{{','.join(POLICY_SET)}}} instead of the "
+                         "depth sweep")
     args = ap.parse_args(argv)
+    if args.policies:
+        n = args.jobs if args.jobs is not None else \
+            (120 if args.quick else 300)
+        run_policies(n_jobs=n, seed=args.seed)
+        return 0
     n = args.jobs if args.jobs is not None else (60 if args.quick else 200)
     run(n_jobs=n, seed=args.seed)
     return 0

@@ -9,6 +9,10 @@ from .scheduler import (Hierarchy, SchedulerInstance, TreeSpec, build_chain,
                         build_tree)
 from .queue import (Clock, Job, JobQueue, JobState, QueueStats, SimClock,
                     WallClock)
+from .policy import (POLICIES, ConservativeBackfill, EasyBackfill, FCFS,
+                     FirstFit, PreemptivePriority, PriorityFCFS,
+                     SchedulingPolicy, make_policy)
+from .tenancy import FairShareArbiter, MultiTenantTree, TenantSpec
 from .external import (AWS_ZONES, TABLE3_CATALOG, ExternalProvider,
                        InstanceType, ProvisionResult, SimulatedEC2Provider,
                        TPUSliceProvider, fleet_catalog)
@@ -22,6 +26,9 @@ __all__ = [
     "SchedulerInstance", "TreeSpec", "build_chain", "build_tree",
     "Clock", "Job", "JobQueue", "JobState", "QueueStats", "SimClock",
     "WallClock", "MethodRegistry",
+    "POLICIES", "ConservativeBackfill", "EasyBackfill", "FCFS",
+    "FirstFit", "PreemptivePriority", "PriorityFCFS", "SchedulingPolicy",
+    "make_policy", "FairShareArbiter", "MultiTenantTree", "TenantSpec",
     "AWS_ZONES", "TABLE3_CATALOG", "ExternalProvider", "InstanceType",
     "ProvisionResult", "SimulatedEC2Provider", "TPUSliceProvider",
     "fleet_catalog",

@@ -21,6 +21,19 @@ subtractive transform on the donor), the parent reassigns the vertices
 to the requesting job, and the subgraph travels down to the requester in
 JGF exactly like a parent-matched subgraph.
 
+Preemptive reclaim (the ``revoke`` RPC): when free-resource reclaim
+fails and the grow carries ``preempt=True``, the parent may ask sibling
+subtrees to *evict* lower-priority preemptible allocations.  The donor
+releases each victim bottom-up (its spliced-in vertices leave the donor
+and propagate up exactly like a timed release), notifies its
+``revoke_listeners`` so the owning job queue can requeue the victim,
+and then donates the freed subgraph like an ordinary reclaim.
+``GrowResult.victims`` carries the evicted jobids back to the caller —
+embedded in the JGF payload under a top-level ``"victims"`` key, so
+intermediate levels forward it verbatim.  A ``FairShareArbiter``
+attached to the parent (``host.arbiter``) gates which tenant may
+preempt which (weighted fair share over the ``usage`` RPC).
+
 The JGF payload is encoded exactly once, at the level that matched, and
 forwarded verbatim by intermediate levels (§Perf control-plane
 optimization); encoding happens *outside* the measured t_match /
@@ -66,6 +79,7 @@ class MGTiming:
     external: bool = False
     via_sibling: Optional[str] = None   # donor sibling name, if routed
     ancestors_updated: int = 0
+    n_victims: int = 0                  # allocations evicted by this grow
 
     @property
     def total(self) -> float:
@@ -76,6 +90,13 @@ class MGTiming:
 class Allocation:
     jobid: str
     paths: List[str] = field(default_factory=list)
+    # scheduling-policy metadata, set by the owning JobQueue: a revoke
+    # may only evict allocations marked preemptible, and only to serve
+    # a strictly higher-priority grow.  Raw match_allocate allocations
+    # default to non-preemptible, so delegation markers and manually
+    # placed jobs are never stolen.
+    priority: int = 0
+    preemptible: bool = False
 
     @property
     def n_vertices(self) -> int:
@@ -88,21 +109,26 @@ class GrowResult:
     Truthiness == success.  ``via`` records where the subgraph came
     from: "local", "sibling:<name>", "parent", "external", or None on
     failure.  ``jgf`` holds the encoded subgraph when the grow was
-    served over RPC (encoded once, forwarded verbatim).
+    served over RPC (encoded once, forwarded verbatim).  ``victims``
+    lists the jobids whose allocations were revoked to satisfy a
+    preemptive grow, so callers can account for displaced work.
     """
 
-    __slots__ = ("ok", "new_paths", "size", "via", "timing", "jgf")
+    __slots__ = ("ok", "new_paths", "size", "via", "timing", "jgf",
+                 "victims")
 
     def __init__(self, ok: bool, new_paths: Optional[List[str]] = None,
                  size: int = 0, via: Optional[str] = None,
                  timing: Optional[MGTiming] = None,
-                 jgf: Optional[bytes] = None):
+                 jgf: Optional[bytes] = None,
+                 victims: Optional[List[str]] = None):
         self.ok = ok
         self.new_paths = new_paths or []
         self.size = size
         self.via = via
         self.timing = timing
         self.jgf = jgf
+        self.victims = victims or []
 
     def __bool__(self) -> bool:
         return self.ok
@@ -120,7 +146,8 @@ class GrowResult:
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"GrowResult(ok={self.ok}, via={self.via!r}, "
-                f"size={self.size}, n_paths={len(self.new_paths)})")
+                f"size={self.size}, n_paths={len(self.new_paths)}, "
+                f"victims={self.victims})")
 
 
 class GrowEngine:
@@ -140,12 +167,17 @@ class GrowEngine:
     # ------------------------------------------------------------------ #
     def grow(self, jobspec: Jobspec, jobid: str, *,
              requester: Optional[str] = None,
-             encode: bool = False) -> GrowResult:
+             encode: bool = False,
+             priority: int = 0,
+             preempt: bool = False) -> GrowResult:
         """Run one MATCHGROW at this level.
 
         ``requester`` names the child the request came from (excluded
         from sibling routing); ``encode=True`` additionally produces the
         JGF bytes an RPC response needs (the caller side skips this).
+        ``preempt=True`` arms the revoke path: after free-resource
+        reclaim fails, sibling subtrees may evict preemptible
+        allocations of priority strictly below ``priority``.
         """
         host = self.host
         rec = MGTiming(level=host.name, jobid=jobid,
@@ -174,8 +206,18 @@ class GrowEngine:
         if res is not None:
             return res
 
-        # 3. forward up the hierarchy
-        res = self._forward_to_parent(jobspec, jobid, rec)
+        # 2b. preemptive reclaim: evict lower-priority work from
+        # sibling subtrees (gated by the fair-share arbiter, if any)
+        if preempt:
+            res = self._reclaim_from_children(jobspec, jobid, requester,
+                                              rec, encode, preempt=True,
+                                              priority=priority)
+            if res is not None:
+                return res
+
+        # 3. forward up the hierarchy (preempt semantics travel along)
+        res = self._forward_to_parent(jobspec, jobid, rec,
+                                      priority=priority, preempt=preempt)
         if res is not None:
             return res
 
@@ -197,20 +239,34 @@ class GrowEngine:
 
     def _reclaim_from_children(self, jobspec: Jobspec, jobid: str,
                                requester: Optional[str], rec: MGTiming,
-                               encode: bool) -> Optional[GrowResult]:
+                               encode: bool, preempt: bool = False,
+                               priority: int = 0) -> Optional[GrowResult]:
         host = self.host
+        arbiter = getattr(host, "arbiter", None) if preempt else None
+        usage: Optional[Dict[str, Dict]] = None
+        if arbiter is not None:
+            usage = self._tenant_usage(host.children)
         for name, transport in host.children.items():
             if name == requester:
                 continue
+            if arbiter is not None and requester is not None and \
+                    not arbiter.may_preempt(requester, name, usage):
+                continue
             t0 = time.perf_counter()
-            resp = transport.call("reclaim", pack_json(
-                {"jobspec": jobspec.to_dict(), "jobid": jobid}))
+            if preempt:
+                resp = transport.call("revoke", pack_json(
+                    {"jobspec": jobspec.to_dict(), "jobid": jobid,
+                     "priority": priority}))
+            else:
+                resp = transport.call("reclaim", pack_json(
+                    {"jobspec": jobspec.to_dict(), "jobid": jobid}))
             rec.t_comms += time.perf_counter() - t0
             if not resp:
                 continue
             data = json.loads(resp)
             donated: List[str] = data["paths"]
             jgf = data["jgf"]
+            victims: List[str] = data.get("victims", [])
             # Splice is the identity for vertices this level already
             # holds (the donor's graph is a subgraph of ours); anything
             # genuinely new (e.g. the donor's own external resources)
@@ -224,17 +280,36 @@ class GrowEngine:
                 len(jgf["graph"].get("edges", []))
             rec.ancestors_updated = tres.ancestors_updated
             rec.via_sibling = name
+            rec.n_victims = len(victims)
             # vertices the donor held that we did not (e.g. its own
             # external resources) only live here for this job
             host.spliced_paths.update(tres.new_paths)
             self._book(jobid, donated)
             host.timings.append(rec)
+            if victims:
+                # ride inside the JGF payload so intermediate levels
+                # forward it verbatim; splice_jgf only reads "graph"
+                jgf["victims"] = victims
             return GrowResult(
                 True, new_paths=donated, size=rec.matched_size,
                 via=f"sibling:{name}", timing=rec,
                 jgf=json.dumps(jgf, separators=(",", ":")).encode()
-                if encode else None)
+                if encode else None,
+                victims=victims)
         return None
+
+    def _tenant_usage(self, children: Dict) -> Dict[str, Dict]:
+        """Per-child usage snapshot for fair-share arbitration (one
+        ``usage`` RPC per child subtree)."""
+        out: Dict[str, Dict] = {}
+        for name, transport in children.items():
+            try:
+                resp = transport.call("usage", b"")
+            except Exception:
+                continue
+            if resp:
+                out[name] = json.loads(resp)
+        return out
 
     @staticmethod
     def _aliased(data: Dict, tres, jobid: str) -> bool:
@@ -255,20 +330,26 @@ class GrowEngine:
         return False
 
     def _forward_to_parent(self, jobspec: Jobspec, jobid: str,
-                           rec: MGTiming) -> Optional[GrowResult]:
+                           rec: MGTiming, priority: int = 0,
+                           preempt: bool = False) -> Optional[GrowResult]:
         host = self.host
         if host.parent is None:
             return None
+        req = {"jobspec": jobspec.to_dict(), "jobid": jobid,
+               "from": host.name}
+        if preempt:
+            req["preempt"] = True
+            req["priority"] = priority
         t0 = time.perf_counter()
-        resp = host.parent.call("match_grow", pack_json(
-            {"jobspec": jobspec.to_dict(), "jobid": jobid,
-             "from": host.name}))
+        resp = host.parent.call("match_grow", pack_json(req))
         rec.t_comms += time.perf_counter() - t0
         if not resp:
             return None
         # fused deserialize + AddSubgraph (RunGrow add=True)
         t0 = time.perf_counter()
         data = json.loads(resp)
+        victims: List[str] = data.get("victims", [])
+        rec.n_victims = len(victims)
         tres = splice_jgf(host.graph, data)
         if self._aliased(data, tres, jobid):
             # vertices the ancestor matched (and allocated to the job)
@@ -293,7 +374,8 @@ class GrowEngine:
         host.timings.append(rec)
         return GrowResult(
             True, new_paths=list(tres.new_paths), size=tres.total_size,
-            via="parent", timing=rec, jgf=bytes(resp))  # verbatim
+            via="parent", timing=rec, jgf=bytes(resp),  # verbatim
+            victims=victims)
 
     def _provision_external(self, jobspec: Jobspec, jobid: str,
                             rec: MGTiming,
@@ -343,3 +425,89 @@ class GrowEngine:
         host.spliced_paths.difference_update(paths)
         host.external_paths.difference_update(paths)
         return {"paths": list(paths), "jgf": sub.to_jgf()}
+
+    def revoke(self, jobspec: Jobspec, priority: int) -> Optional[Dict]:
+        """Preemptive variant of :meth:`reclaim`.
+
+        If free resources alone cannot cover ``jobspec``, evict local
+        allocations that are ``preemptible`` and of priority strictly
+        below ``priority`` — lowest priority first, newest first within
+        a priority — until the match succeeds.  Each victim is released
+        bottom-up through ``host.release`` (its spliced-in and external
+        vertices leave this graph and the release propagates to the
+        parent, exactly like a timed release), and ``host``'s
+        ``revoke_listeners`` are notified so the owning job queue can
+        requeue the victim.  Returns ``{"paths", "jgf", "victims"}`` or
+        None when even eviction cannot possibly help (checked against
+        the pruning aggregates before anything is evicted).
+        """
+        host = self.host
+
+        def donatable(alloc: Allocation) -> Dict[str, int]:
+            # vertices that would return to THIS graph's free pool on
+            # eviction: spliced-in and external copies leave the graph
+            # instead (they free at the ancestor), so they cannot be
+            # donated from here and do not justify evicting their owner
+            out: Dict[str, int] = {}
+            for p in alloc.paths:
+                v = host.graph.get(p)
+                if v is None or p in host.spliced_paths \
+                        or p in host.external_paths:
+                    continue
+                out[v.type] = out.get(v.type, 0) + 1
+            return out
+
+        def deficit() -> Dict[str, int]:
+            free: Dict[str, int] = {}
+            for root in host.graph.roots:
+                for t, n in host.graph.vertex(root).agg_free.items():
+                    free[t] = free.get(t, 0) + n
+            return {t: n - free.get(t, 0)
+                    for t, n in jobspec.type_counts().items()
+                    if n - free.get(t, 0) > 0}
+
+        out = self.reclaim(jobspec)
+        if out is not None:
+            out["victims"] = []
+            return out
+        candidates = [a for a in host.allocations.values()
+                      if a.preemptible and a.priority < priority]
+        if not candidates:
+            return None
+        # feasibility precheck over the pruning aggregates: free counts
+        # plus every candidate's *donatable* vertices must cover the
+        # request per type, else eviction would displace work for
+        # nothing the requester could ever receive from here
+        avail = dict()
+        for root in host.graph.roots:
+            for t, n in host.graph.vertex(root).agg_free.items():
+                avail[t] = avail.get(t, 0) + n
+        for alloc in candidates:
+            for t, n in donatable(alloc).items():
+                avail[t] = avail.get(t, 0) + n
+        if any(n > avail.get(t, 0)
+               for t, n in jobspec.type_counts().items()):
+            return None
+        # lowest priority first; newest first within a priority (later-
+        # started work is the cheaper loss)
+        order = {id(a): i for i, a in enumerate(host.allocations.values())}
+        candidates.sort(key=lambda a: (a.priority, -order[id(a)]))
+        victims: List[str] = []
+        for alloc in candidates:
+            gap = deficit()
+            if gap and not any(t in gap for t in donatable(alloc)):
+                continue        # evicting this one cannot close the gap
+            jobid = alloc.jobid
+            freed = list(alloc.paths)
+            host.release(jobid)
+            victims.append(jobid)
+            for fn in getattr(host, "revoke_listeners", ()):
+                fn(jobid, freed)
+            out = self.reclaim(jobspec)
+            if out is not None:
+                out["victims"] = victims
+                return out
+        # structural mismatch despite sufficient counts: the victims
+        # are already requeued by their listeners and will restart on
+        # the freed resources at their queue's next scheduling pass
+        return None

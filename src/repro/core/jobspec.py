@@ -60,6 +60,18 @@ class ResourceReq:
             v += 1  # implicit slot wrapping (Fluxion convention)
         return 2 * v
 
+    def type_counts(self, out: Optional[Dict[str, int]] = None,
+                    mult: int = 1) -> Dict[str, int]:
+        """Total requested vertices per type — the aggregate the pruning
+        filters track.  Used for shadow-time reservations and for
+        preemption-feasibility prechecks."""
+        if out is None:
+            out = {}
+        out[self.type] = out.get(self.type, 0) + mult * self.count
+        for w in self.with_:
+            w.type_counts(out, mult * self.count)
+        return out
+
 
 @dataclass
 class Jobspec:
@@ -84,6 +96,13 @@ class Jobspec:
 
     def graph_size(self) -> int:
         return sum(r.graph_size() for r in self.resources)
+
+    def type_counts(self) -> Dict[str, int]:
+        """Total requested vertices per type across all resource roots."""
+        out: Dict[str, int] = {}
+        for r in self.resources:
+            r.type_counts(out)
+        return out
 
     # ------------------------------------------------------------------ #
     # convenience constructors

@@ -1,0 +1,385 @@
+"""Pluggable scheduling policies for the job lifecycle queue.
+
+The mechanism/policy split ("Design Principles of Dynamic Resource
+Management for Heterogeneous Systems"): ``core/queue.py`` owns the job
+lifecycle *mechanism* (states, clocks, timed release, MA/MG binding),
+while everything that is a *decision* — queue order, which jobs may
+jump a blocked head, and whether running work may be displaced — lives
+here behind the :class:`SchedulingPolicy` interface ("Job Scheduling in
+High Performance Computing" surveys exactly this policy space).
+
+A policy sees the queue read-mostly: it inspects ``queue.pending`` /
+``queue.running`` / the scheduler's pruning aggregates, and acts only
+through two mechanism entry points — ``queue.start_if_fits(job)`` and
+``queue.preempt(job)``.
+
+Implementations:
+
+* :class:`FCFS` — strict arrival order, no backfill, no preemption.
+* :class:`PriorityFCFS` — priority first (higher wins), FCFS within a
+  priority; no backfill.  (The old ``backfill=False`` behavior.)
+* :class:`EasyBackfill` — PriorityFCFS order + EASY backfill: the
+  blocked head gets a reservation at its shadow time (estimated from
+  the pruning aggregates and running jobs' end times), and later jobs
+  may jump ahead only if they finish before it.  The queue's default —
+  this is the pre-refactor behavior, bit for bit.
+* :class:`ConservativeBackfill` — every pending job ahead of a
+  candidate keeps its reservation: the candidate is admitted only if a
+  count-based reservation profile shows no reservation moving later.
+  Admits long jobs on genuinely spare capacity (which EASY's
+  single-shadow rule rejects) while never delaying anyone.
+* :class:`FirstFit` — no reservations at all: anything in the queue
+  that fits right now starts, arrival order otherwise.  Maximum
+  utilization, unbounded head-of-line delay.
+* :class:`PreemptivePriority` — EASY ordering/backfill, plus a blocked
+  head may evict running preemptible jobs of strictly lower priority
+  (newest first); victims are requeued PREEMPTED -> PENDING.  Also
+  arms the hierarchy's revoke path (``preemptive = True``) so grows
+  escalating out of this queue may displace sibling-subtree work.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .queue import Job, JobQueue
+
+
+class SchedulingPolicy:
+    """Order, backfill, and preemption decisions for a JobQueue."""
+
+    name = "base"
+    # when True, grows escalating from this queue carry preempt=True
+    # through the hierarchy (the engine's revoke path)
+    preemptive = False
+
+    def sort_key(self, job: "Job") -> Tuple:
+        """Pending-queue order; default: priority first, FCFS within."""
+        return (-job.priority, job.seq)
+
+    def backfill(self, queue: "JobQueue", head: "Job") -> int:
+        """Called with the blocked head; may start jobs behind it via
+        ``queue.start_if_fits``.  Returns the number started."""
+        return 0
+
+    def preempt_victims(self, queue: "JobQueue",
+                        head: "Job") -> List["Job"]:
+        """Running jobs to evict so the blocked ``head`` can start.
+        Empty list = no preemption.  The mechanism releases the victims
+        and requeues them before retrying the head."""
+        return []
+
+
+class FCFS(SchedulingPolicy):
+    """Strict arrival order; priorities ignored."""
+
+    name = "fcfs"
+
+    def sort_key(self, job: "Job") -> Tuple:
+        return (job.seq,)
+
+
+class PriorityFCFS(SchedulingPolicy):
+    """Priority + FCFS, no backfill (the old ``backfill=False``)."""
+
+    name = "priority-fcfs"
+
+
+class EasyBackfill(PriorityFCFS):
+    """EASY: only the head holds a reservation (its shadow time)."""
+
+    name = "easy"
+
+    def backfill(self, queue: "JobQueue", head: "Job") -> int:
+        now = queue.clock.now()
+        shadow = shadow_time(queue, head)
+        started = 0
+        for job in list(queue.pending[1:]):
+            if job.walltime is None:
+                continue            # unbounded jobs can never backfill
+            if shadow is not None and now + job.walltime > shadow:
+                continue            # would delay the head's reservation
+            if _cannot_fit(queue, job):
+                continue
+            if queue.start_if_fits(job):
+                queue._log(f"t={now:.3f} backfill {job.jobid} ahead of "
+                           f"{head.jobid} (shadow={shadow})")
+                started += 1
+        return started
+
+
+class ConservativeBackfill(PriorityFCFS):
+    """Every queued job keeps its reservation, not just the head.
+
+    Reservations are estimated with a count-based profile over the
+    pruning aggregates (free counts per type now, plus the typed
+    releases of running and already-reserved jobs in end-time order).
+    A candidate is admitted only if recomputing the profile with the
+    candidate hypothetically running moves no reservation later.
+
+    Like production schedulers (Slurm's ``bf_max_job_test``), the work
+    per pass is bounded: only the first ``depth`` pending jobs carry
+    protected reservations and at most ``max_candidates`` jobs are
+    tested per pass — the profile is O(depth·|running|) per candidate,
+    which must not scale with a deep backlog."""
+
+    name = "conservative"
+
+    def __init__(self, depth: int = 32, max_candidates: int = 64):
+        self.depth = depth
+        self.max_candidates = max_candidates
+
+    def backfill(self, queue: "JobQueue", head: "Job") -> int:
+        now = queue.clock.now()
+        started = 0
+        tested = 0
+        snapshot = list(queue.pending)
+        gone: set = set()           # ids started earlier this pass
+        # the no-candidate profile only depends on the queue prefix: it
+        # is computed once per pass (and refreshed after each start,
+        # which changes availability); a prefix of it is the profile of
+        # any shorter "ahead" list, since reservations are sequential
+        before = None
+        for idx, job in enumerate(snapshot):
+            if job is head or job.walltime is None or id(job) in gone:
+                continue
+            if tested >= self.max_candidates:
+                break
+            if _cannot_fit(queue, job):
+                continue            # cannot fit now: profiles pointless
+            tested += 1
+            ahead = [j for j in snapshot[:idx]
+                     if id(j) not in gone][:self.depth]
+            if before is None:
+                before = reservation_profile(
+                    queue, [j for j in snapshot
+                            if id(j) not in gone][:self.depth])
+            after = reservation_profile(queue, ahead, hypothetical=job)
+            if any(_later(after.get(j.jobid), before.get(j.jobid))
+                   for j in ahead):
+                continue            # would push someone's reservation
+            if queue.start_if_fits(job):
+                queue._log(f"t={now:.3f} backfill {job.jobid} "
+                           f"(conservative: no reservation delayed)")
+                started += 1
+                gone.add(id(job))
+                before = None       # availability changed: recompute
+        return started
+
+
+class FirstFit(PriorityFCFS):
+    """No reservations: start anything that fits, in queue order.
+
+    ``max_candidates`` bounds the match attempts per pass (each failed
+    fit runs the matcher) so a deep backlog cannot stall the clock."""
+
+    name = "firstfit"
+
+    def __init__(self, max_candidates: int = 256):
+        self.max_candidates = max_candidates
+
+    def backfill(self, queue: "JobQueue", head: "Job") -> int:
+        now = queue.clock.now()
+        started = 0
+        tested = 0
+        for job in list(queue.pending):
+            if job is head:
+                continue
+            if tested >= self.max_candidates:
+                break
+            if _cannot_fit(queue, job):
+                continue
+            tested += 1
+            if queue.start_if_fits(job):
+                queue._log(f"t={now:.3f} backfill {job.jobid} (firstfit)")
+                started += 1
+        return started
+
+
+class PreemptivePriority(EasyBackfill):
+    """EASY + eviction: a blocked head may displace running preemptible
+    jobs of strictly lower priority (lowest priority first, newest
+    first within one) when the freed vertices would cover its deficit."""
+
+    name = "preempt"
+    preemptive = True
+
+    def preempt_victims(self, queue: "JobQueue",
+                        head: "Job") -> List["Job"]:
+        deficit = _deficit(queue, head)
+        if not deficit:
+            return []               # structurally blocked, not capacity
+        sched = queue.scheduler
+        candidates = sorted(
+            (j for j in queue.running
+             if j.preemptible and j.priority < head.priority),
+            key=lambda j: (j.priority, -j.seq))
+        victims: List["Job"] = []
+        for job in candidates:
+            # only vertices that would return to the LOCAL free pool
+            # count: spliced/external copies leave the graph on release
+            # (they free at the ancestor), and a victim contributing
+            # nothing toward the deficit must not be evicted at all
+            contrib: Dict[str, int] = {}
+            for p in job.paths:
+                v = sched.graph.get(p)
+                if v is None or p in sched.spliced_paths \
+                        or p in sched.external_paths:
+                    continue
+                contrib[v.type] = contrib.get(v.type, 0) + 1
+            if not any(t in deficit for t in contrib):
+                continue            # evicting this one cannot help
+            victims.append(job)
+            for t, n in contrib.items():
+                if t in deficit:
+                    deficit[t] -= n
+                    if deficit[t] <= 0:
+                        del deficit[t]
+            if not deficit:
+                return victims
+        return []                   # eviction alone cannot cover it
+
+
+#: registry for CLI / benchmark selection by name
+POLICIES: Dict[str, type] = {
+    p.name: p for p in (FCFS, PriorityFCFS, EasyBackfill,
+                        ConservativeBackfill, FirstFit,
+                        PreemptivePriority)
+}
+
+
+def make_policy(name: str) -> SchedulingPolicy:
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduling policy {name!r}; "
+            f"known: {', '.join(sorted(POLICIES))}") from None
+
+
+# ---------------------------------------------------------------------- #
+# reservation estimation over the pruning aggregates
+# ---------------------------------------------------------------------- #
+def _free_counts(queue: "JobQueue") -> Dict[str, int]:
+    g = queue.scheduler.graph
+    free: Dict[str, int] = {}
+    for root in g.roots:
+        for t, n in g.vertex(root).agg_free.items():
+            free[t] = free.get(t, 0) + n
+    return free
+
+
+def _deficit(queue: "JobQueue", job: "Job") -> Dict[str, int]:
+    """Per-type shortfall between ``job``'s request and current free
+    counts; empty when counts suffice (a structural block)."""
+    free = _free_counts(queue)
+    return {t: n - free.get(t, 0)
+            for t, n in job.jobspec.type_counts().items()
+            if n - free.get(t, 0) > 0}
+
+
+def _cannot_fit(queue: "JobQueue", job: "Job") -> bool:
+    """Cheap prefilter: local free counts cannot cover the request and
+    the job may not grow — the matcher is guaranteed to fail, so skip
+    it without running it.  Growing jobs always get their attempt (the
+    hierarchy may cover the shortfall)."""
+    grow = queue.allow_grow if job.grow is None else job.grow
+    return not grow and bool(_deficit(queue, job))
+
+
+def _path_type_counts(queue: "JobQueue", job: "Job") -> Dict[str, int]:
+    g = queue.scheduler.graph
+    out: Dict[str, int] = {}
+    for p in job.paths:
+        v = g.get(p)
+        if v is not None:
+            out[v.type] = out.get(v.type, 0) + 1
+    return out
+
+
+def shadow_time(queue: "JobQueue", head: "Job") -> Optional[float]:
+    """EASY's reservation for the head: walk running jobs in end-time
+    order, crediting their vertices per type to the current free
+    counts, until the head's request is covered.  None = releases alone
+    can never cover it (the head needs grow escalation), so backfill is
+    unrestricted."""
+    deficit = _deficit(queue, head)
+    if not deficit:
+        # structurally blocked despite sufficient counts: reserve
+        # "now" — conservative, nothing may jump the head
+        return queue.clock.now()
+    g = queue.scheduler.graph
+    for job in sorted((j for j in queue.running
+                       if j.end_time is not None),
+                      key=lambda j: j.end_time):
+        for p in job.paths:
+            v = g.get(p)
+            if v is None:
+                continue
+            if v.type in deficit:
+                deficit[v.type] -= 1
+                if deficit[v.type] <= 0:
+                    del deficit[v.type]
+        if not deficit:
+            return job.end_time
+    return None
+
+
+def reservation_profile(queue: "JobQueue", pending: List["Job"],
+                        hypothetical: Optional["Job"] = None
+                        ) -> Dict[str, Optional[float]]:
+    """Count-based reservation times for ``pending`` (in order).
+
+    Availability starts at the current free counts; running jobs return
+    their typed vertices at their end times; each reserved job consumes
+    its request at its reservation and returns it ``walltime`` later.
+    With ``hypothetical`` set, that job is treated as running from now
+    for its walltime (the conservative-backfill what-if).  None means
+    the profile never covers the job (it needs grow escalation)."""
+    now = queue.clock.now()
+    avail = _free_counts(queue)
+    releases: List[Tuple[float, Dict[str, int]]] = [
+        (j.end_time, _path_type_counts(queue, j))
+        for j in queue.running if j.end_time is not None]
+    if hypothetical is not None:
+        need = hypothetical.jobspec.type_counts()
+        for t, n in need.items():
+            avail[t] = avail.get(t, 0) - n
+        releases.append((now + hypothetical.walltime, need))
+    releases.sort(key=lambda e: e[0])
+    out: Dict[str, Optional[float]] = {}
+    for job in pending:
+        need = job.jobspec.type_counts()
+        t_res: Optional[float] = None
+        if all(avail.get(t, 0) >= n for t, n in need.items()):
+            t_res = now
+        else:
+            # scan a copy: a job the profile can never cover must not
+            # leave future releases pre-credited into the pool, or
+            # every later job would be misread as reservable "now"
+            acc = dict(avail)
+            for i, (t_rel, counts) in enumerate(releases):
+                for t, n in counts.items():
+                    acc[t] = acc.get(t, 0) + n
+                if all(acc.get(t, 0) >= n for t, n in need.items()):
+                    t_res = t_rel
+                    avail = acc
+                    releases = releases[i + 1:]
+                    break
+        out[job.jobid] = t_res
+        if t_res is not None:
+            for t, n in need.items():
+                avail[t] = avail.get(t, 0) - n
+            if job.walltime is not None:
+                releases.append((t_res + job.walltime, need))
+                releases.sort(key=lambda e: e[0])
+    return out
+
+
+def _later(after: Optional[float], before: Optional[float]) -> bool:
+    """Did a reservation move later (None = never/unbounded)?"""
+    if before is None:
+        return False                # was already unbounded
+    if after is None:
+        return True
+    return after > before + 1e-12

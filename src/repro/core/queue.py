@@ -1,32 +1,46 @@
-"""Job lifecycle queue over the hierarchical scheduler.
+"""Job lifecycle *mechanism* over the hierarchical scheduler.
 
-The seed treated every allocation as permanent — no workload ever
-released resources over time, so queueing dynamics (where scheduler
-throughput is actually won, cf. "Job Scheduling in High Performance
-Computing") could not be reproduced.  This module adds the missing
-lifecycle mechanism, kept strictly separate from scheduling policy
-("Design Principles of Dynamic Resource Management ..."):
+This module is the mechanism half of the queue's mechanism/policy split
+("Design Principles of Dynamic Resource Management ..."): it owns job
+state, time, and resource binding, and delegates every scheduling
+*decision* to a pluggable :class:`~repro.core.policy.SchedulingPolicy`
+(``core/policy.py`` — FCFS, priority+EASY, conservative, firstfit,
+preemptive-priority; "Job Scheduling in High Performance Computing"
+surveys the space).
+
+Mechanism, in this file:
 
 * **Clocks** — ``SimClock`` (manually advanced virtual time, for trace
   replay) and ``WallClock`` share one ``now()`` interface, so the same
   queue drives both simulations and live orchestration.
-* **Job states** — PENDING → RUNNING → COMPLETED (or CANCELLED), with
-  submit/start/end timestamps for wait-time accounting.
-* **Ordering** — priority first (higher wins), FCFS within a priority.
+* **Job states** — PENDING → RUNNING → COMPLETED (or CANCELLED), plus
+  PREEMPTED: a running job displaced by a revoke or a preemptive
+  policy is requeued (PREEMPTED behaves like PENDING for scheduling)
+  with preemption-count and requeue-wait accounting in ``QueueStats``.
 * **Timed release** — a RUNNING job with a walltime is completed
   automatically once its end time passes; its resources go back through
   ``release``/``match_shrink`` (the bottom-up subtractive transform),
   removing spliced-in vertices at the leaf and returning them to the
-  parent's free pool.
-* **EASY backfill** — when the head job does not fit, its start is
-  *reserved* at the shadow time estimated from the pruning aggregates
-  (current free counts per type + the end times of running jobs), and
-  later jobs may jump ahead only if they finish before that
-  reservation, so the head is never delayed.
+  parent's free pool.  ``_finish`` is idempotent: a cancel racing a
+  passed walltime deadline cannot double-release a path.
 * **Grow escalation** — with ``allow_grow=True`` a job that does not
   fit locally escalates through the scheduler hierarchy (and, at the
-  top, to the External API) via the shared MATCHGROW engine: the
-  external-burst path rides the same queue as everything else.
+  top, to the External API) via the shared MATCHGROW engine; a
+  preemptive policy additionally arms the engine's revoke path, so the
+  grow may displace lower-priority sibling-subtree allocations.
+* **Revocation** — the queue registers itself on its scheduler's
+  ``revoke_listeners``; when the hierarchy evicts one of its
+  allocations, every affected job is requeued PREEMPTED → PENDING and
+  rescheduled on the next step.
+
+Policy, delegated (see ``core/policy.py``):
+
+* pending-queue **order** (``policy.sort_key``),
+* **backfill** behind a blocked head (``policy.backfill``), including
+  any reservation semantics (EASY's shadow time, conservative's full
+  reservation profile, firstfit's none),
+* **preemption decisions** (``policy.preempt_victims`` for intra-queue
+  eviction; ``policy.preemptive`` arming cross-tenant revokes).
 """
 from __future__ import annotations
 
@@ -37,6 +51,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from .jobspec import Jobspec
+from .policy import EasyBackfill, PriorityFCFS, SchedulingPolicy
 from .scheduler import SchedulerInstance
 
 
@@ -45,6 +60,7 @@ class JobState(enum.Enum):
     RUNNING = "running"
     COMPLETED = "completed"
     CANCELLED = "cancelled"
+    PREEMPTED = "preempted"     # displaced, back in the pending queue
 
 
 # ---------------------------------------------------------------------- #
@@ -102,6 +118,7 @@ class Job:
     alloc_id: str
     walltime: Optional[float] = None    # None = runs until cancelled
     priority: int = 0
+    preemptible: bool = False           # may a revoke displace it?
     submit_time: float = 0.0
     start_time: Optional[float] = None
     end_time: Optional[float] = None    # scheduled completion
@@ -110,6 +127,9 @@ class Job:
     via: Optional[str] = None           # where MG sourced the resources
     grow: Optional[bool] = None         # per-job override of allow_grow
     seq: int = 0
+    preemptions: int = 0                # times displaced and requeued
+    requeue_wait: float = 0.0           # time spent PREEMPTED, total
+    preempted_at: Optional[float] = None
 
     @property
     def wait_time(self) -> Optional[float]:
@@ -129,6 +149,9 @@ class QueueStats:
     max_wait: float
     utilization: float       # busy vertex-seconds / capacity vertex-seconds
     makespan: float
+    preemptions: int = 0            # eviction events, total
+    preempted_jobs: int = 0         # distinct jobs ever displaced
+    mean_requeue_wait: float = 0.0  # mean PREEMPTED->restart gap per event
 
 
 # ---------------------------------------------------------------------- #
@@ -137,24 +160,32 @@ class QueueStats:
 class JobQueue:
     """Pending-job queue + lifecycle engine over one scheduler instance.
 
-    ``backfill`` enables EASY backfill; ``allow_grow`` lets jobs that
-    fail local MA escalate through the hierarchy / External API via
-    MATCHGROW.
+    ``policy`` selects the scheduling policy (default:
+    :class:`~repro.core.policy.EasyBackfill`, the historical
+    priority+EASY behavior; ``backfill=False`` is shorthand for
+    :class:`~repro.core.policy.PriorityFCFS`).  ``allow_grow`` lets
+    jobs that fail local MA escalate through the hierarchy / External
+    API via MATCHGROW.
     """
 
     def __init__(self, scheduler: SchedulerInstance,
                  clock: Optional[Clock] = None,
                  backfill: bool = True,
-                 allow_grow: bool = False):
+                 allow_grow: bool = False,
+                 policy: Optional[SchedulingPolicy] = None):
         self.scheduler = scheduler
         self.clock = clock or WallClock()
-        self.backfill = backfill
+        if policy is None:
+            policy = EasyBackfill() if backfill else PriorityFCFS()
+        self.policy = policy
+        self.backfill = backfill        # legacy flag; policy governs
         self.allow_grow = allow_grow
         self.pending: List[Job] = []
         self.running: List[Job] = []
         self.completed: List[Job] = []
         self.events: List[str] = []
         self.max_events = 10_000        # bounded history for long runs
+        self.n_preemptions = 0
         self._seq = itertools.count()
         self._by_id: Dict[str, Job] = {}
         # scheduling memo: a blocked head is not re-escalated through
@@ -162,10 +193,16 @@ class JobQueue:
         # resource state actually changed
         self._version = 0
         self._sched_version = -1
+        # anti-thrash: a head whose eviction round did NOT let it start
+        # (structural fragmentation despite covering counts) must not
+        # evict again until resource state really changes (a finish)
+        self._preempt_blocked: set = set()
         # time-weighted utilization accounting
         self._last_t = self.clock.now()
         self._busy_integral = 0.0
         self._cap_integral = 0.0
+        # requeue victims the hierarchy revokes out from under us
+        scheduler.revoke_listeners.append(self._on_revoked)
 
     # ------------------------------------------------------------------ #
     # submission / cancellation
@@ -173,35 +210,40 @@ class JobQueue:
     def submit(self, jobspec: Jobspec, walltime: Optional[float] = None,
                priority: int = 0, alloc_id: Optional[str] = None,
                jobid: Optional[str] = None,
-               grow: Optional[bool] = None) -> Job:
+               grow: Optional[bool] = None,
+               preemptible: bool = False) -> Job:
         """Enqueue a job.  ``grow`` overrides the queue's ``allow_grow``
         for this job only (True: may escalate via MATCHGROW; False:
-        strictly local MATCHALLOCATE; None: queue default)."""
+        strictly local MATCHALLOCATE; None: queue default).
+        ``preemptible`` marks the job's allocation as revocable by
+        higher-priority work (cross-tenant revokes and preemptive
+        policies only ever displace preemptible jobs)."""
         self._accrue()
         seq = next(self._seq)
         jobid = jobid or f"q{seq}-{self.scheduler.name}"
         job = Job(jobid=jobid, jobspec=jobspec,
                   alloc_id=alloc_id or jobid, walltime=walltime,
                   priority=priority, submit_time=self.clock.now(),
-                  grow=grow, seq=seq)
+                  grow=grow, seq=seq, preemptible=preemptible)
         self._by_id[jobid] = job
         self._version += 1
         self.pending.append(job)
-        # priority first (higher wins), FCFS within a priority
-        self.pending.sort(key=lambda j: (-j.priority, j.seq))
+        self.pending.sort(key=self.policy.sort_key)
         self._log(f"t={job.submit_time:.3f} submit {jobid}")
         return job
 
     def dispatch(self, jobspec: Jobspec, walltime: Optional[float] = None,
                  priority: int = 0, alloc_id: Optional[str] = None,
                  jobid: Optional[str] = None,
-                 grow: Optional[bool] = None) -> Job:
+                 grow: Optional[bool] = None,
+                 preemptible: bool = False) -> Job:
         """Controller path: submit + try to start *this* job right now,
         regardless of the queue's head-of-line state (a reconciler like
         the orchestrator must not be wedged behind an unrelated blocked
         batch job).  The job stays PENDING if it cannot start."""
         job = self.submit(jobspec, walltime=walltime, priority=priority,
-                          alloc_id=alloc_id, jobid=jobid, grow=grow)
+                          alloc_id=alloc_id, jobid=jobid, grow=grow,
+                          preemptible=preemptible)
         self._complete_due()
         if self._try_start(job):
             self._activate(job)
@@ -214,7 +256,7 @@ class JobQueue:
         job = self._by_id.get(jobid)
         if job is None:
             return False
-        if job.state is JobState.PENDING:
+        if job.state in (JobState.PENDING, JobState.PREEMPTED):
             # a job that never ran leaves no trace: controllers retry
             # blocked submissions every reconcile tick, and retaining
             # each attempt would grow _by_id (and stats) without bound
@@ -310,9 +352,15 @@ class JobQueue:
         """Timed release: hand the job's resources back bottom-up.
         ``release`` frees local vertices in place, evicts external and
         spliced-in copies, and propagates up the hierarchy, so one call
-        covers every ``via`` a grow can have."""
+        covers every ``via`` a grow can have.  Idempotent: finishing a
+        job that already left ``running`` (cancel racing a passed
+        walltime deadline, a double cancel) is a no-op — the paths were
+        released exactly once."""
+        if job not in self.running:
+            return
         self.scheduler.release(job.alloc_id, job.paths)
         self.running.remove(job)
+        self._preempt_blocked.clear()   # resource state really changed
         job.state = state
         job.end_time = min(job.end_time, self.clock.now()) \
             if job.end_time is not None else self.clock.now()
@@ -323,6 +371,10 @@ class JobQueue:
             # replicas up and down (the orchestrator autoscaler) must
             # not grow queue history and stats without bound
             self._by_id.pop(job.jobid, None)
+        # the departing job must stop pinning the shared allocation's
+        # revocability (e.g. a finished priority-9 job leaving only a
+        # priority-0 one behind)
+        self._sync_alloc_meta(job.alloc_id)
         self._version += 1
         self._log(f"t={self.clock.now():.3f} {state.value} {job.jobid}")
 
@@ -330,11 +382,16 @@ class JobQueue:
         sched = self.scheduler
         grow = self.allow_grow if job.grow is None else job.grow
         if grow:
-            res = sched.match_grow(job.jobspec, job.alloc_id)
+            res = sched.match_grow(job.jobspec, job.alloc_id,
+                                   priority=job.priority,
+                                   preempt=self.policy.preemptive)
             if not res:
                 return False
             job.paths = res.paths()
             job.via = res.via
+            if res.victims:
+                self._log(f"t={self.clock.now():.3f} {job.jobid} "
+                          f"revoked {','.join(res.victims)}")
         else:
             # strictly local MA; several jobs may share one alloc_id,
             # so record only the delta this job contributed
@@ -354,10 +411,73 @@ class JobQueue:
         job.start_time = now
         job.end_time = now + job.walltime if job.walltime is not None \
             else None
+        if job.preempted_at is not None:
+            job.requeue_wait += now - job.preempted_at
+            job.preempted_at = None
         self.running.append(job)
+        self._sync_alloc_meta(job.alloc_id)
         self._version += 1
         self._log(f"t={now:.3f} start {job.jobid} via={job.via} "
                   f"wait={job.wait_time:.3f}")
+
+    def start_if_fits(self, job: Job) -> bool:
+        """Policy entry point: try to start one pending job now."""
+        if self._try_start(job):
+            self._activate(job)
+            return True
+        return False
+
+    def _sync_alloc_meta(self, alloc_id: str) -> None:
+        """Propagate job priorities to the scheduler allocation so the
+        hierarchy's revoke path sees them: an allocation is revocable
+        only if *every* job bound to it is preemptible, and carries the
+        highest priority among them."""
+        alloc = self.scheduler.allocations.get(alloc_id)
+        if alloc is None:
+            return
+        mine = [j for j in self.running if j.alloc_id == alloc_id]
+        if mine:
+            alloc.priority = max(j.priority for j in mine)
+            alloc.preemptible = all(j.preemptible for j in mine)
+
+    # ------------------------------------------------------------------ #
+    # preemption mechanism (decisions live in the policy / the engine)
+    # ------------------------------------------------------------------ #
+    def preempt(self, job: Job) -> None:
+        """Evict one RUNNING job of this queue: release its resources
+        and requeue it (PREEMPTED, scheduled like PENDING)."""
+        if job not in self.running:
+            return
+        self._accrue()
+        self.scheduler.release(job.alloc_id, job.paths)
+        self._requeue(job)
+
+    def _on_revoked(self, alloc_id: str, paths: List[str]) -> None:
+        """revoke_listener: the hierarchy already released the
+        allocation out from under us — requeue every job bound to it
+        (resources are gone; do NOT release again)."""
+        for job in [j for j in self.running if j.alloc_id == alloc_id]:
+            self._accrue()
+            self._requeue(job)
+
+    def _requeue(self, job: Job) -> None:
+        now = self.clock.now()
+        if job in self.running:
+            self.running.remove(job)
+        job.state = JobState.PREEMPTED
+        job.paths = []
+        job.via = None
+        job.start_time = None
+        job.end_time = None
+        job.preemptions += 1
+        job.preempted_at = now
+        self.n_preemptions += 1
+        self._sync_alloc_meta(job.alloc_id)
+        self.pending.append(job)
+        self.pending.sort(key=self.policy.sort_key)
+        self._version += 1
+        self._log(f"t={now:.3f} preempt {job.jobid} "
+                  f"(n={job.preemptions})")
 
     def kick(self) -> None:
         """Force the next step() to re-attempt scheduling even though
@@ -378,63 +498,20 @@ class JobQueue:
                 self._activate(head)
                 started += 1
                 continue
-            if not self.backfill:
-                break
-            started += self._backfill(head)
+            victims = [] if head.jobid in self._preempt_blocked \
+                else self.policy.preempt_victims(self, head)
+            if victims:
+                for victim in victims:
+                    self.preempt(victim)
+                if self._try_start(head):
+                    self._activate(head)
+                    started += 1
+                    continue
+                self._preempt_blocked.add(head.jobid)
+            started += self.policy.backfill(self, head)
             break
         self._sched_version = self._version
         return started
-
-    def _backfill(self, head: Job) -> int:
-        """EASY backfill: jobs behind the blocked head may start only if
-        they finish before the head's reserved start (shadow time)."""
-        now = self.clock.now()
-        shadow = self._shadow_time(head)
-        started = 0
-        for job in list(self.pending[1:]):
-            if job.walltime is None:
-                continue            # unbounded jobs can never backfill
-            if shadow is not None and now + job.walltime > shadow:
-                continue            # would delay the head's reservation
-            if self._try_start(job):
-                self._activate(job)
-                self._log(f"t={now:.3f} backfill {job.jobid} ahead of "
-                          f"{head.jobid} (shadow={shadow})")
-                started += 1
-        return started
-
-    def _shadow_time(self, head: Job) -> Optional[float]:
-        """Reserve the head job's start using the pruning aggregates:
-        walk running jobs in end-time order, crediting their vertices
-        per type to the current free counts, until the head's request is
-        covered.  None = releases alone can never cover it (the head
-        needs grow escalation), so backfill is unrestricted."""
-        g = self.scheduler.graph
-        free: Dict[str, int] = {}
-        for root in g.roots:
-            for t, n in g.vertex(root).agg_free.items():
-                free[t] = free.get(t, 0) + n
-        deficit = {t: n - free.get(t, 0)
-                   for t, n in _req_type_counts(head.jobspec).items()
-                   if n - free.get(t, 0) > 0}
-        if not deficit:
-            # structurally blocked despite sufficient counts: reserve
-            # "now" — conservative, nothing may jump the head
-            return self.clock.now()
-        for job in sorted((j for j in self.running
-                           if j.end_time is not None),
-                          key=lambda j: j.end_time):
-            for p in job.paths:
-                v = g.get(p)
-                if v is None:
-                    continue
-                if v.type in deficit:
-                    deficit[v.type] -= 1
-                    if deficit[v.type] <= 0:
-                        del deficit[v.type]
-            if not deficit:
-                return job.end_time
-        return None
 
     # ------------------------------------------------------------------ #
     # reporting
@@ -447,6 +524,10 @@ class JobQueue:
                 if j.state is JobState.COMPLETED]
         util = (self._busy_integral / self._cap_integral
                 if self._cap_integral > 0 else 0.0)
+        displaced = [j for j in self.completed + self.running + self.pending
+                     if j.preemptions > 0]
+        n_events = sum(j.preemptions for j in displaced)
+        rq_wait = sum(j.requeue_wait for j in displaced)
         return QueueStats(
             submitted=len(self._by_id),
             started=len(waits),
@@ -457,19 +538,12 @@ class JobQueue:
             max_wait=waits[-1] if waits else 0.0,
             utilization=util,
             makespan=self.clock.now(),
+            preemptions=self.n_preemptions,
+            preempted_jobs=len(displaced),
+            mean_requeue_wait=rq_wait / n_events if n_events else 0.0,
         )
 
 
 def _req_type_counts(jobspec: Jobspec) -> Dict[str, int]:
-    """Total requested vertices per type (the aggregate the pruning
-    filters track), for shadow-time estimation."""
-    out: Dict[str, int] = {}
-
-    def walk(req, mult: int) -> None:
-        out[req.type] = out.get(req.type, 0) + mult * req.count
-        for w in req.with_:
-            walk(w, mult * req.count)
-
-    for r in jobspec.resources:
-        walk(r, 1)
-    return out
+    """Back-compat alias; see :meth:`Jobspec.type_counts`."""
+    return jobspec.type_counts()

@@ -166,28 +166,96 @@ class RPCServer:
 
 
 class SocketTransport(Transport):
-    """Internode regime: loopback TCP with length-prefixed frames."""
+    """Internode regime: loopback TCP with length-prefixed frames.
+
+    Connections are pooled: the transport keeps up to ``pool_size``
+    persistent connections and checks one out per in-flight call, so
+    concurrent MG requests to the same level no longer serialize on a
+    single locked socket (each RPCServer session runs in its own
+    thread; it is the *instances* that are not thread-safe, which the
+    per-connection request/response discipline preserves).  A call that
+    finds the pool empty dials a fresh connection; surplus connections
+    beyond the pool size are closed on check-in rather than retained.
+    A connection that died between calls is redialed once.
+    """
 
     regime = "internode"
 
-    def __init__(self, address: Tuple[str, int]):
-        self._sock = socket.create_connection(address)
-        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    def __init__(self, address: Tuple[str, int], pool_size: int = 4):
+        self._address = address
+        self._pool_size = pool_size
         self._lock = threading.Lock()
+        self._pool: list = [self._dial()]   # fail fast on a bad address
+        self._closed = False
+
+    def _dial(self) -> socket.socket:
+        s = socket.create_connection(self._address)
+        s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return s
+
+    def _checkout(self) -> Tuple[socket.socket, bool]:
+        """Returns (socket, from_pool) — pooled connections may have
+        died while idle and are the only ones worth a retry."""
+        with self._lock:
+            if self._closed:
+                raise ConnectionError("transport closed")
+            if self._pool:
+                return self._pool.pop(), True
+        return self._dial(), False
+
+    def _checkin(self, sock: socket.socket) -> None:
+        with self._lock:
+            if not self._closed and len(self._pool) < self._pool_size:
+                self._pool.append(sock)
+                return
+        try:
+            sock.close()
+        except OSError:
+            pass
 
     def call(self, method: str, payload: bytes) -> bytes:
         frame = _encode_frame(method, payload)
-        with self._lock:
-            self._sock.sendall(_HDR.pack(len(frame)) + frame)
-            hdr = _recv_exact(self._sock, 4)
+        sock, pooled = self._checkout()
+        try:
+            try:
+                sock.sendall(_HDR.pack(len(frame)) + frame)
+            except (ConnectionError, OSError):
+                # the retry is scoped to the SEND phase on a POOLED
+                # connection: that failure proves the server never saw
+                # the request (the peer closed while the socket idled),
+                # so re-sending cannot duplicate a non-idempotent RPC
+                # (match_grow/revoke/release).  A receive-phase failure
+                # is ambiguous — the server may have executed the call
+                # — and must surface to the caller instead.
+                if not pooled:
+                    raise
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                sock = self._dial()
+                sock.sendall(_HDR.pack(len(frame)) + frame)
+            hdr = _recv_exact(sock, 4)
             (n,) = _HDR.unpack(hdr)
-            return _recv_exact(self._sock, n)
+            resp = _recv_exact(sock, n)
+        except BaseException:
+            try:
+                sock.close()
+            except OSError:
+                pass
+            raise
+        self._checkin(sock)
+        return resp
 
     def close(self) -> None:
-        try:
-            self._sock.close()
-        except OSError:
-            pass
+        with self._lock:
+            self._closed = True
+            pool, self._pool = self._pool, []
+        for s in pool:
+            try:
+                s.close()
+            except OSError:
+                pass
 
 
 # ---------------------------------------------------------------------- #

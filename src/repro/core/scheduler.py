@@ -75,10 +75,19 @@ class SchedulerInstance:
         # only exist here for a job's lifetime and are removed — not
         # freed into the local pool — when that job releases them
         self.spliced_paths: Set[str] = set()
+        # preemption hooks: called with (jobid, freed_paths) when a
+        # revoke evicts an allocation at this instance, so the owning
+        # JobQueue can requeue the victim (PREEMPTED -> PENDING)
+        self.revoke_listeners: List[Callable[[str, List[str]], None]] = []
+        # optional weighted fair-share arbiter (core/tenancy.py): gates
+        # which child subtree may preempt which sibling's work
+        self.arbiter = None
         self.methods = MethodRegistry()
         self.methods.register("match_grow", self._rpc_match_grow)
         self.methods.register("release", self._rpc_release)
         self.methods.register("reclaim", self._rpc_reclaim)
+        self.methods.register("revoke", self._rpc_revoke)
+        self.methods.register("usage", self._rpc_usage)
 
     # ------------------------------------------------------------------ #
     # serving (parent side)
@@ -116,7 +125,9 @@ class SchedulerInstance:
         jobspec = Jobspec.from_dict(req["jobspec"])
         jobid = req.get("jobid", "remote")
         res = self.engine.grow(jobspec, jobid,
-                               requester=req.get("from"), encode=True)
+                               requester=req.get("from"), encode=True,
+                               priority=req.get("priority", 0),
+                               preempt=bool(req.get("preempt", False)))
         return res.jgf if res and res.jgf is not None else b""
 
     def _rpc_release(self, payload: bytes) -> bytes:
@@ -129,6 +140,26 @@ class SchedulerInstance:
         jobspec = Jobspec.from_dict(req["jobspec"])
         out = self.engine.reclaim(jobspec)
         return pack_json(out) if out is not None else b""
+
+    def _rpc_revoke(self, payload: bytes) -> bytes:
+        req = unpack_json(payload)
+        jobspec = Jobspec.from_dict(req["jobspec"])
+        out = self.engine.revoke(jobspec, req.get("priority", 0))
+        return pack_json(out) if out is not None else b""
+
+    def _rpc_usage(self, payload: bytes) -> bytes:
+        return pack_json(self.usage())
+
+    def usage(self) -> Dict[str, int]:
+        """Occupancy snapshot for fair-share arbitration: vertices held
+        by real jobs (delegation markers do not count as usage)."""
+        from .graph import DELEGATION_PREFIX
+        allocated = sum(
+            1 for v in self.graph.vertices()
+            if any(not j.startswith(DELEGATION_PREFIX)
+                   for j in v.allocations))
+        return {"allocated": allocated,
+                "capacity": self.graph.num_vertices}
 
     # ------------------------------------------------------------------ #
     # MATCHALLOCATE
@@ -152,13 +183,17 @@ class SchedulerInstance:
     # ------------------------------------------------------------------ #
     # MATCHGROW (Algorithm 1, via the shared engine)
     # ------------------------------------------------------------------ #
-    def match_grow(self, jobspec: Jobspec, jobid: str) -> GrowResult:
+    def match_grow(self, jobspec: Jobspec, jobid: str, *,
+                   priority: int = 0, preempt: bool = False) -> GrowResult:
         """MG: grow ``jobid``'s allocation by ``jobspec``.
 
         Returns a :class:`GrowResult` (truthy on success) and records an
-        MGTiming either way.
+        MGTiming either way.  ``preempt=True`` allows the hierarchy to
+        revoke preemptible allocations of priority below ``priority``
+        from sibling subtrees when free resources do not suffice.
         """
-        return self.engine.grow(jobspec, jobid)
+        return self.engine.grow(jobspec, jobid, priority=priority,
+                                preempt=preempt)
 
     # ------------------------------------------------------------------ #
     # MATCHSHRINK (subtractive, bottom-up)
@@ -207,15 +242,13 @@ class SchedulerInstance:
         # external vertices disappear when their job releases them
         ext = [p for p in present if p in self.external_paths]
         if ext:
-            remove_subgraph(self.graph, ext, jobid=jobid)
-            self.external_paths.difference_update(ext)
+            self._remove_departed(ext, jobid, self.external_paths)
         # pass-through copies from parent/sibling grows likewise leave
         # this graph instead of inflating the local free pool
         spl = [p for p in present
                if p in self.spliced_paths and p in self.graph]
         if spl:
-            remove_subgraph(self.graph, spl, jobid=jobid)
-            self.spliced_paths.difference_update(spl)
+            self._remove_departed(spl, jobid, self.spliced_paths)
         if paths is None:
             self.allocations.pop(jobid, None)
         else:
@@ -229,6 +262,47 @@ class SchedulerInstance:
         if self.parent is not None and spl:
             self.parent.call("release", pack_json(
                 {"jobid": jobid, "paths": target}))
+
+    def _remove_departed(self, paths: Sequence[str], jobid: str,
+                         book: Set[str]) -> None:
+        """Remove ``jobid``'s departing (spliced/external) vertices.
+
+        Two jobs' spliced-in subgraphs may share an ancestor spine
+        vertex (both grew sockets under one spliced node): removing the
+        first job's paths as whole subtrees would destroy the second
+        job's still-allocated vertices beneath the shared spine.  A
+        path is therefore removed only while nothing under it is still
+        allocated; blocked spines stay (free, still in ``book``) and
+        are swept once the last tenant beneath them departs."""
+        removable = []
+        for p in paths:
+            if any(self.graph.vertex(s).allocations
+                   for s in self.graph.subtree(p)):
+                continue            # someone else still lives below
+            removable.append(p)
+        if removable:
+            remove_subgraph(self.graph, removable, jobid=jobid)
+            book.difference_update(removable)
+        self._sweep_orphan_spines()
+
+    def _sweep_orphan_spines(self) -> None:
+        """Drop spliced/external spine vertices whose payload subtrees
+        are gone: free, childless, and pass-through — bottom-up until
+        a fixpoint, so an entire orphaned spine chain unwinds."""
+        changed = True
+        while changed:
+            changed = False
+            for book in (self.spliced_paths, self.external_paths):
+                for p in sorted(book, key=lambda s: s.count("/"),
+                                reverse=True):
+                    v = self.graph.get(p)
+                    if v is None:
+                        book.discard(p)
+                        changed = True
+                    elif v.free and not self.graph.children(p):
+                        remove_subgraph(self.graph, [p])
+                        book.discard(p)
+                        changed = True
 
 
 # ---------------------------------------------------------------------- #

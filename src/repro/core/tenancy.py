@@ -1,0 +1,157 @@
+"""Multi-tenant trees: per-tenant job queues over sibling subtrees.
+
+The paper's Fig. 2 multi-user topology made operational: every tenant
+owns a sibling subtree of one parent instance (delegated down, so the
+parent's own free pool is empty) and runs its own
+:class:`~repro.core.queue.JobQueue` — with its own scheduling policy —
+against that subtree.  Resource flow between tenants goes through the
+parent's MATCHGROW sibling routing: free resources move via ``reclaim``,
+and, when a tenant's policy is preemptive, busy lower-priority resources
+move via ``revoke`` (the victim's queue requeues it PREEMPTED→PENDING).
+
+The :class:`FairShareArbiter` sits on the parent instance and gates the
+revoke path: a tenant may preempt a sibling only while its own weighted
+usage share is strictly below the sibling's, so a heavy tenant cannot
+churn a light one off its fair share.  Usage is sampled through the
+``usage`` RPC (vertices held by real jobs; delegation markers do not
+count), so the arbiter works across socket links too.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from .graph import ResourceGraph
+from .policy import SchedulingPolicy
+from .queue import Clock, Job, JobQueue, SimClock
+from .scheduler import Hierarchy, TreeSpec, build_tree
+
+
+class FairShareArbiter:
+    """Weighted fair-share gate for cross-tenant preemption.
+
+    ``weights`` maps tenant (child-instance) names to their entitled
+    share.  :meth:`may_preempt` compares weight-normalized usage: the
+    requester may displace the donor's work only while the requester is
+    strictly under-served relative to the donor.  Unknown tenants get
+    weight 1.
+    """
+
+    def __init__(self, weights: Dict[str, float]):
+        self.weights = dict(weights)
+
+    def _normalized(self, name: str, usage: Dict[str, Dict]) -> float:
+        u = usage.get(name)
+        if u is None:
+            return 0.0
+        frac = u.get("allocated", 0) / max(u.get("capacity", 1), 1)
+        return frac / max(self.weights.get(name, 1.0), 1e-9)
+
+    def may_preempt(self, requester: str, donor: str,
+                    usage: Dict[str, Dict]) -> bool:
+        return self._normalized(requester, usage) \
+            < self._normalized(donor, usage)
+
+
+@dataclass
+class TenantSpec:
+    """One tenant: a subtree graph plus its queue configuration."""
+
+    name: str
+    graph: ResourceGraph
+    weight: float = 1.0
+    policy: Optional[SchedulingPolicy] = None
+    allow_grow: bool = True
+    socket: bool = False        # link to the parent over loopback TCP
+
+
+class MultiTenantTree:
+    """A parent instance with one delegated subtree + JobQueue per
+    tenant and a :class:`FairShareArbiter` deciding preemption.
+
+    The parent marks every vertex present in a tenant's subtree as
+    ``delegated-to-<tenant>`` so its own pool is empty: all growth is
+    sibling routing (reclaim/revoke) between tenants, exactly the
+    multi-tenant scenario the ROADMAP names.
+    """
+
+    def __init__(self, root_graph: ResourceGraph,
+                 tenants: List[TenantSpec],
+                 clock: Optional[Clock] = None,
+                 name: str = "root"):
+        self.clock = clock or SimClock()
+        spec = TreeSpec(root_graph, name=name, children=[
+            TreeSpec(t.graph, name=t.name, socket=t.socket)
+            for t in tenants])
+        self.hierarchy: Hierarchy = build_tree(spec)
+        self.root = self.hierarchy[name]
+        for t in tenants:
+            delegated = [p for p in t.graph.paths()
+                         if p in self.root.graph]
+            self.root.graph.set_allocated(delegated,
+                                          f"delegated-to-{t.name}")
+        self.root.arbiter = FairShareArbiter(
+            {t.name: t.weight for t in tenants})
+        self.queues: Dict[str, JobQueue] = {
+            t.name: JobQueue(self.hierarchy[t.name], clock=self.clock,
+                             allow_grow=t.allow_grow, policy=t.policy)
+            for t in tenants}
+
+    def queue(self, tenant: str) -> JobQueue:
+        return self.queues[tenant]
+
+    # ------------------------------------------------------------------ #
+    # joint lifecycle driving (one shared SimClock, many queues)
+    # ------------------------------------------------------------------ #
+    def step(self) -> int:
+        """Run every tenant queue's scheduling pass to fixpoint.  One
+        tenant's release or revoke changes sibling-visible state the
+        other queues' memo cannot see, so each round kicks all queues
+        first; the loop ends when a full round starts nothing."""
+        total = 0
+        while True:
+            for q in self.queues.values():
+                q.kick()
+            started = sum(q.step() for q in self.queues.values())
+            total += started
+            if started == 0:
+                return total
+
+    def advance(self, dt: float) -> int:
+        """Advance the shared SimClock by ``dt``, stopping at every
+        completion event across all tenant queues."""
+        clock = self.clock
+        assert isinstance(clock, SimClock), "advance() needs a SimClock"
+        target = clock.now() + dt
+        started = 0
+        while True:
+            due = [j.end_time
+                   for q in self.queues.values() for j in q.running
+                   if j.end_time is not None and j.end_time <= target]
+            if not due:
+                break
+            clock.set(min(due))
+            started += self.step()
+        clock.set(target)
+        started += self.step()
+        return started
+
+    def drain(self, max_events: int = 100_000) -> List[Job]:
+        """Run until no tenant has running or startable work.  Returns
+        all completed jobs across tenants."""
+        for _ in range(max_events):
+            self.step()
+            nxt = [j.end_time
+                   for q in self.queues.values() for j in q.running
+                   if j.end_time is not None]
+            if nxt:
+                self.clock.set(max(min(nxt), self.clock.now()))
+                continue
+            if not any(q.pending for q in self.queues.values()):
+                break
+            if self.step() == 0:
+                break
+        return [j for q in self.queues.values() for j in q.completed]
+
+    def close(self) -> None:
+        self.hierarchy.close()

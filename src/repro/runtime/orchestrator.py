@@ -11,6 +11,12 @@ scheduler directly:
   (MATCHALLOCATE for the first replica, MATCHGROW after) and scale-down
   is a cancel (the queue's timed-release path: ``release`` /
   ``match_shrink``),
+* replica jobs are **preemptible**: a higher-priority tenant's grow may
+  revoke the replica set's allocation through the hierarchy, and the
+  next ``reconcile`` observes the loss (the queue requeues the evicted
+  replicas PREEMPTED→PENDING; the reconciler drops those retries,
+  syncs the actual replica count, and re-dispatches against current
+  state — so revocation looks exactly like any other drift),
 * a ``BurstPolicy`` decides when scaling may spill to the External API
   (the paper notes Slurm/LSF gate bursting behind static cluster-wide
   config; here it is a per-replica-set policy object, and per-USER
@@ -85,6 +91,7 @@ class Orchestrator:
         (external ones before local, so cloud cost drains first)."""
         rs = self.replica_sets[name]
         applied = 0
+        self._observe_revocations(rs)
         # scale up: one queue job per replica, sharing rs.jobid's
         # allocation; the queue runs MA for the first and MG after
         while rs.replicas < rs.desired:
@@ -106,7 +113,7 @@ class Orchestrator:
                 job = self.queue.dispatch(
                     rs.pod_spec, walltime=None, alloc_id=rs.jobid,
                     jobid=f"{rs.jobid}-r{next(self._replica_seq)}",
-                    grow=not first)
+                    grow=not first, preemptible=True)
             finally:
                 self.scheduler.external = provider
             if job.state is not JobState.RUNNING:
@@ -135,6 +142,26 @@ class Orchestrator:
             rs.events.append(f"scaled down to {rs.replicas}")
             applied -= 1
         return applied
+
+    # ------------------------------------------------------------ #
+    def _observe_revocations(self, rs: ReplicaSet) -> None:
+        """Reconcile the replica count with reality after the hierarchy
+        revoked (part of) the replica set's allocation.  Requeued
+        PREEMPTED replicas are dropped — re-dispatching fresh jobs lets
+        the burst policy re-evaluate against the post-revoke state —
+        and the actual/external counters resync from the queue."""
+        requeued = [j for j in self.queue.pending
+                    if j.alloc_id == rs.jobid]
+        for job in requeued:
+            self.queue.cancel(job.jobid)
+        alive = self.queue.running_for(rs.jobid)
+        if requeued or len(alive) != rs.replicas:
+            rs.events.append(
+                f"revoked: {rs.replicas} -> {len(alive)} replicas")
+        rs.replicas = len(alive)
+        rs.external_replicas = sum(
+            1 for j in alive
+            if any(p in self.scheduler.external_paths for p in j.paths))
 
     # ------------------------------------------------------------ #
     def autoscale(self, name: str, load: float,

@@ -116,3 +116,48 @@ def test_first_replica_is_local_only():
         assert any(t.level == "L0" for t in h.top.timings)
     finally:
         h.close()
+
+
+def test_reconcile_after_revocation():
+    """Replica jobs are preemptible: a higher-priority tenant's grow
+    revokes the replica set's allocation through the hierarchy; the
+    next reconcile observes the loss, drops the requeued retries, and
+    rebuilds replicas against the post-revoke state."""
+    from repro.core import (JobState, Jobspec, MultiTenantTree,
+                            PreemptivePriority, TenantSpec, build_cluster)
+    root_g = build_cluster(nodes=3, sockets_per_node=2,
+                           cores_per_socket=8)
+    a_g = root_g.extract([p for p in root_g.paths() if "node0" in p])
+    b_g = root_g.extract([p for p in root_g.paths()
+                          if "node1" in p or "node2" in p])
+    mt = MultiTenantTree(root_g, [
+        TenantSpec("A", a_g, policy=PreemptivePriority()),
+        TenantSpec("B", b_g)])
+    try:
+        orch = Orchestrator(mt.hierarchy["B"], queue=mt.queue("B"))
+        rs = orch.create(ReplicaSet("web", POD, desired=10))
+        assert rs.replicas == 10        # 8 on B's nodes + 2 grown onto A
+        # tenant A needs sockets back at high priority; A's free pool
+        # cannot cover it, so the grow revokes the (shared, hence
+        # whole) replica allocation and every replica requeues
+        hi = mt.queue("A").submit(
+            Jobspec.hpc(nodes=0, sockets=2, cores=8),
+            walltime=5.0, priority=9)
+        mt.queue("A").step()    # only A's queue: the revoke lands but
+        # B's queue has not rescheduled its requeued victims yet
+        assert hi.state is JobState.RUNNING
+        assert not orch.queue.running_for(rs.jobid)
+        # reconcile: observe, resync, rebuild what fits around the
+        # high-priority tenant's allocation
+        orch.reconcile("web")
+        assert any(e.startswith("revoked:") for e in rs.events)
+        assert 0 < rs.replicas < 10
+        # once A's job finishes, the next reconcile restores 10
+        mt.advance(5.0)
+        assert hi.state is JobState.COMPLETED
+        orch.reconcile("web")
+        assert rs.replicas == 10
+        for inst in mt.hierarchy.instances:
+            assert inst.graph.validate_tree(), inst.name
+    finally:
+        mt.close()

@@ -30,6 +30,40 @@ def test_socket_transport_roundtrip():
         srv.close()
 
 
+def test_socket_transport_pools_connections():
+    """Concurrent calls each get their own pooled connection (no
+    serialization on one socket), the pool never exceeds its bound,
+    and connections are reused across sequential calls."""
+    import threading
+
+    srv = RPCServer(lambda m, p: p[::-1])
+    try:
+        t = SocketTransport(srv.address, pool_size=2)
+        try:
+            results = {}
+
+            def worker(i):
+                payload = bytes([i]) * 1024
+                results[i] = t.call("rev", payload) == payload[::-1]
+
+            threads = [threading.Thread(target=worker, args=(i,))
+                       for i in range(8)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            assert all(results[i] for i in range(8))
+            assert len(t._pool) <= 2        # surplus closed on check-in
+            # sequential calls reuse the pooled connection
+            before = t._pool[0]
+            assert t.call("rev", b"ab") == b"ba"
+            assert t._pool[0] is before
+        finally:
+            t.close()
+    finally:
+        srv.close()
+
+
 def test_json_helpers():
     d = {"jobspec": {"resources": [{"type": "core", "count": 4}]}}
     assert unpack_json(pack_json(d)) == d
