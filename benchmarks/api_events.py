@@ -1,0 +1,120 @@
+"""`api_events` micro-benchmark: events/sec through the event bus.
+
+Three legs, sized by ``--quick``:
+
+* **emit** — raw ``EventLog.emit`` throughput, with 0 and 1 live
+  subscribers (the bus is on every queue hot path: submit, start,
+  release, free all emit, so emission cost bounds queue throughput);
+* **replay in-proc** — cursor replay (``Instance.events_since``) of a
+  populated journal, whole-log and incremental-page patterns;
+* **replay over socket** — the identical ``events_since`` verb spoken
+  by a ``RemoteInstance`` through ``SocketTransport`` (JSON encode +
+  framed loopback TCP + decode), giving the in-proc vs internode ratio
+  for the observability path, mirroring the paper's two communication
+  regimes.
+
+  PYTHONPATH=src python -m benchmarks.api_events [--quick]
+
+Results land in ``experiments/bench/api_events.json`` (uploaded with
+the bench-smoke artifacts in CI).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List
+
+from repro.core import (EventLog, EventType, Instance, RemoteInstance,
+                        SimClock, build_cluster)
+from repro.core.rpc import SocketTransport
+
+from .common import emit, print_table
+
+
+def bench_emit(n_events: int, subscribers: int) -> Dict:
+    log = EventLog(maxlen=n_events)
+    sink: List = []
+    for _ in range(subscribers):
+        log.subscribe(sink.append)
+    t0 = time.perf_counter()
+    for i in range(n_events):
+        log.emit(EventType.SUBMIT, f"j{i % 64}", t=float(i), priority=0)
+    dt = time.perf_counter() - t0
+    assert len(sink) == subscribers * n_events
+    return {"leg": f"emit ({subscribers} subs)", "events": n_events,
+            "wall_s": dt, "events_per_s": n_events / dt}
+
+
+def _populated_instance(n_events: int) -> Instance:
+    """An Instance whose journal holds ~n_events real lifecycle events
+    (submit/alloc/start/release/free ~= 5 per job)."""
+    inst = Instance(graph=build_cluster(nodes=2), name="bench",
+                    clock=SimClock())
+    spec_rows = n_events // 5
+    from repro.core import Jobspec
+    spec = Jobspec.hpc(nodes=0, sockets=1, cores=8)
+    for _ in range(spec_rows):
+        inst.submit(spec, walltime=1.0)
+        inst.advance(1.0)
+    inst.drain()
+    return inst
+
+
+def bench_replay(api, label: str, repeat: int) -> Dict:
+    """Whole-journal cursor replay throughput (the consumer cold-start
+    pattern: a reconciler reading everything since cursor 0)."""
+    total = 0
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        events, cursor = api.events_since(0)
+        total += len(events)
+        # incremental follow-up: the steady-state pattern is ~free
+        more, _ = api.events_since(cursor)
+        assert not more
+    dt = time.perf_counter() - t0
+    return {"leg": label, "events": total, "wall_s": dt,
+            "events_per_s": total / dt if dt > 0 else 0.0}
+
+
+def run(n_events: int = 20_000, repeat: int = 20) -> List[Dict]:
+    rows = [
+        bench_emit(n_events, subscribers=0),
+        bench_emit(n_events, subscribers=1),
+    ]
+    inst = _populated_instance(n_events)
+    try:
+        rows.append(bench_replay(inst, "replay in-proc", repeat))
+        remote = RemoteInstance(SocketTransport(inst.serve()))
+        try:
+            rows.append(bench_replay(remote, "replay socket",
+                                     max(repeat // 4, 2)))
+        finally:
+            remote.close()
+    finally:
+        inst.close()
+    print_table("api_events: events/sec through the bus "
+                "(emit + cursor replay, in-proc vs socket)", rows,
+                ["leg", "events", "wall_s", "events_per_s"])
+    inproc = next(r for r in rows if r["leg"] == "replay in-proc")
+    sock = next(r for r in rows if r["leg"] == "replay socket")
+    if sock["events_per_s"] > 0:
+        print(f"\nin-proc / socket replay ratio: "
+              f"{inproc['events_per_s'] / sock['events_per_s']:.1f}x")
+    emit("api_events", rows)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--events", type=int, default=None)
+    args = ap.parse_args(argv)
+    n = args.events if args.events is not None else \
+        (5_000 if args.quick else 20_000)
+    run(n_events=n, repeat=5 if args.quick else 20)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -54,6 +54,13 @@ def main() -> int:
           "{easy, conservative, firstfit, preempt}")
     trace_replay.run_policies(n_jobs=120 if args.quick else 300)
 
+    print("#" * 72)
+    print("# Instance API — events/sec through the bus "
+          "(in-proc vs socket)")
+    from . import api_events
+    api_events.run(n_events=5_000 if args.quick else 20_000,
+                   repeat=5 if args.quick else 20)
+
     if not args.skip_roofline:
         print("#" * 72)
         print("# roofline over dry-run artifacts (brief §Roofline)")

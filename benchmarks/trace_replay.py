@@ -4,8 +4,8 @@ Two modes:
 
 * **depth sweep** (default) — replays a synthetic job trace
   (Poisson-ish arrivals, mixed request sizes, finite walltimes)
-  through ``core/queue.py`` at three hierarchy depths (1 / 3 / 5
-  scheduler levels).  The queue runs on a SimClock with timed release
+  through the ``Instance`` service API (``core/api.py``) at three
+  hierarchy depths (1 / 3 / 5 scheduler levels).  The queue runs on a SimClock with timed release
   enabled, EASY backfill on, and grow escalation so jobs that do not
   fit the leaf pull resources down the chain — every MG on the way
   records its t_match / t_comms / t_add_upd components.
@@ -32,7 +32,7 @@ import sys
 import time
 from typing import Dict, List
 
-from repro.core import (Hierarchy, Jobspec, JobQueue, SimClock, build_chain,
+from repro.core import (Hierarchy, Instance, Jobspec, SimClock, build_chain,
                         build_cluster, make_policy)
 
 from .common import emit, print_table
@@ -89,16 +89,17 @@ def replay(depth: int, trace: List[Dict]) -> Dict:
     h = build_depth(depth)
     try:
         clock = SimClock()
-        q = JobQueue(h.leaf, clock=clock, backfill=True, allow_grow=True)
+        inst = Instance(h.leaf, clock=clock, backfill=True,
+                        allow_grow=True)
         t0 = time.perf_counter()
         for entry in trace:
-            q.advance(max(entry["arrival"] - clock.now(), 0.0))
-            q.submit(entry["jobspec"], walltime=entry["walltime"],
-                     priority=entry["priority"])
-            q.step()
-        q.drain()
+            inst.advance(max(entry["arrival"] - clock.now(), 0.0))
+            inst.submit(entry["jobspec"], walltime=entry["walltime"],
+                        priority=entry["priority"])
+            inst.step()
+        inst.drain()
         wall = time.perf_counter() - t0
-        s = q.stats()
+        s = inst.stats()
         timings = h.total_timings()
         row = {
             "depth": depth,
@@ -168,28 +169,27 @@ def make_contended_trace(n_jobs: int, seed: int = 0,
 def replay_policy(policy_name: str, trace: List[Dict],
                   nodes: int = 4) -> Dict:
     """One policy over one trace on a single over-subscribed instance."""
-    from repro.core import SchedulerInstance
-
     g = build_cluster(nodes=nodes)
-    sched = SchedulerInstance(f"pc-{policy_name}", g)
     clock = SimClock()
-    q = JobQueue(sched, clock=clock, policy=make_policy(policy_name))
+    inst = Instance(graph=g, name=f"pc-{policy_name}", clock=clock,
+                    policy=make_policy(policy_name))
     t0 = time.perf_counter()
     for entry in trace:
-        q.advance(max(entry["arrival"] - clock.now(), 0.0))
-        q.submit(entry["jobspec"], walltime=entry["walltime"],
-                 priority=entry["priority"],
-                 preemptible=entry["preemptible"])
-        q.step()
-    q.drain()
+        inst.advance(max(entry["arrival"] - clock.now(), 0.0))
+        inst.submit(entry["jobspec"], walltime=entry["walltime"],
+                    priority=entry["priority"],
+                    preemptible=entry["preemptible"])
+        inst.step()
+    completed = inst.drain()
     wall = time.perf_counter() - t0
-    s = q.stats()
+    s = inst.stats()
     assert s.completed == s.submitted, \
         f"{policy_name}: {s.submitted - s.completed} jobs never ran"
-    assert sched.allocations == {}, f"{policy_name}: leaked allocations"
+    assert inst.scheduler.allocations == {}, \
+        f"{policy_name}: leaked allocations"
     assert g.validate_tree(), policy_name
-    hi = [j.wait_time for j in q.completed if j.priority > 0]
-    lo = [j.wait_time for j in q.completed if j.priority == 0]
+    hi = [j.wait_time for j in completed if j.priority > 0]
+    lo = [j.wait_time for j in completed if j.priority == 0]
     return {
         "policy": policy_name,
         "jobs": s.submitted,

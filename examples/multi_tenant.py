@@ -1,4 +1,5 @@
-"""Multi-tenant tree demo: fair-share gated preemption between tenants.
+"""Multi-tenant tree demo through the `Instance` API: fair-share gated
+preemption between tenants, observed live from the event journal.
 
 Two tenants share one cluster as sibling subtrees of a fully delegated
 parent (the paper's Fig. 2 multi-user topology).  Tenant ``batch`` runs
@@ -11,9 +12,13 @@ cheapest useful batch victim, and the victim's own queue requeues it
 (PREEMPTED -> PENDING).  After the production job completes, the victim
 restarts and finishes: nothing is lost, only delayed.
 
+Every tenant talks to its subtree through an ``Instance``; the
+REVOKE -> PREEMPT -> restart story is watched through a live event
+subscription on batch's journal, not by polling job state.
+
 Run:  PYTHONPATH=src python examples/multi_tenant.py
 """
-from repro.core import (JobState, Jobspec, MultiTenantTree,
+from repro.core import (EventType, JobState, Jobspec, MultiTenantTree,
                         PreemptivePriority, TenantSpec, build_cluster)
 
 NODE = Jobspec.hpc(nodes=1, sockets=2, cores=32)
@@ -27,14 +32,19 @@ mt = MultiTenantTree(root_g, [
     TenantSpec("prod", prod_g, weight=2.0, policy=PreemptivePriority()),
     TenantSpec("batch", batch_g, weight=1.0),
 ])
-prod, batch = mt.queue("prod"), mt.queue("batch")
+prod, batch = mt.instance("prod"), mt.instance("batch")
+
+# live subscription: print batch's disruption events as they happen
+batch.subscribe(lambda ev: print(
+    f"     [batch journal] t={ev.t:.0f} {ev.type.value} {ev.jobid}")
+    if ev.type in (EventType.REVOKE, EventType.PREEMPT) else None)
 
 # t=0: batch fills its own node AND grows onto prod's idle node
 b1 = batch.submit(NODE, walltime=100.0, priority=0, preemptible=True)
 b2 = batch.submit(NODE, walltime=100.0, priority=0, preemptible=True)
 mt.step()
 print("t=0  batch jobs running:",
-      [(j.jobid, j.via) for j in (b1, b2)])
+      [(h.jobid, h.via) for h in (b1, b2)])
 assert b1.state is JobState.RUNNING and b2.state is JobState.RUNNING
 
 # t=10: prod needs a node back, now, at high priority
@@ -60,14 +70,22 @@ print(f"end  victim {victim.jobid} {victim.state.value} after "
       f"{victim.requeue_wait:.0f}s requeued; all jobs done")
 assert victim.state is JobState.COMPLETED
 
-for name, q in mt.queues.items():
-    s = q.stats()
+# the victim's full story, replayed from the journal by cursor: grown
+# in, revoked out from under its queue, requeued, regrown, finished
+story = [ev.type.value for ev in victim.events()]
+print("     victim event sequence:", " -> ".join(story))
+assert story == ["submit", "grow", "alloc", "start",
+                 "release", "revoke", "preempt",
+                 "grow", "alloc", "start", "release", "free"], story
+
+for name, inst in mt.instances.items():
+    s = inst.stats()
     print(f"     {name}: completed={s.completed} "
           f"mean_wait={s.mean_wait:.1f}s preemptions={s.preemptions}")
 
 # invariants: no vertex anywhere still bound to any job
-for inst in mt.hierarchy.instances:
-    assert inst.graph.validate_tree(), inst.name
-    assert not any(a.paths for a in inst.allocations.values()), inst.name
+for sched in mt.hierarchy.instances:
+    assert sched.graph.validate_tree(), sched.name
+    assert not any(a.paths for a in sched.allocations.values()), sched.name
 mt.close()
 print("invariants hold: trees valid, no allocations leaked")

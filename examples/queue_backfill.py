@@ -1,58 +1,68 @@
-"""Job lifecycle queue demo: priorities, EASY backfill, timed release.
+"""Job lifecycle demo through the `Instance` API: priorities, EASY
+backfill, timed release, and the typed event journal.
 
 A long-running job holds half the cluster; a wide high-priority job
 blocks at the head of the queue; small jobs jump ahead through EASY
-backfill — but only those short enough to finish before the head's
-reserved start, so the head is never delayed.  Timed release then frees
-everything automatically as virtual time advances.
+backfill — but only those that cannot delay the head's reserved start.
+Timed release then frees everything automatically as virtual time
+advances.  Everything goes through ``Instance.submit`` and
+``JobHandle``; the event log at the end is the same journal a remote
+consumer would read with ``events_since``.
 
 Run:  PYTHONPATH=src python examples/queue_backfill.py
 """
-from repro.core import JobQueue, Jobspec, SchedulerInstance, SimClock, \
-    build_cluster
+from repro.core import Instance, Jobspec, SimClock, build_cluster
 
-g = build_cluster(nodes=2, sockets_per_node=2, cores_per_socket=16)
-sched = SchedulerInstance("demo", g)
-clock = SimClock()
-q = JobQueue(sched, clock=clock, backfill=True)
+inst = Instance(graph=build_cluster(nodes=2, sockets_per_node=2,
+                                    cores_per_socket=16),
+                name="demo", clock=SimClock(), backfill=True)
 
 # t=0: a job takes one of the two nodes for 100s
-hog = q.submit(Jobspec.hpc(nodes=1, sockets=2, cores=32), walltime=100.0)
-q.step()
+hog = inst.submit(Jobspec.hpc(nodes=1, sockets=2, cores=32),
+                  walltime=100.0)
+inst.step()
 
 # t=1: a wide 2-node job arrives — it cannot start until the hog ends,
 # so EASY reserves its start at t=100 (the shadow time)
-q.advance(1.0)
-wide = q.submit(Jobspec.hpc(nodes=2, sockets=4, cores=64),
-                walltime=50.0, priority=5)
+inst.advance(1.0)
+wide = inst.submit(Jobspec.hpc(nodes=2, sockets=4, cores=64),
+                   walltime=50.0, priority=5)
 
 # t=2: three small socket-rooted jobs arrive behind the wide one
-q.advance(1.0)
-short = q.submit(Jobspec.hpc(nodes=0, sockets=1, cores=8), walltime=30.0)
-too_long = q.submit(Jobspec.hpc(nodes=0, sockets=1, cores=8), walltime=500.0)
-short2 = q.submit(Jobspec.hpc(nodes=0, sockets=1, cores=16), walltime=20.0)
-q.step()
+inst.advance(1.0)
+short = inst.submit(Jobspec.hpc(nodes=0, sockets=1, cores=8),
+                    walltime=30.0)
+too_long = inst.submit(Jobspec.hpc(nodes=0, sockets=1, cores=8),
+                       walltime=500.0)
+short2 = inst.submit(Jobspec.hpc(nodes=0, sockets=1, cores=16),
+                     walltime=20.0)
+inst.step()
 
 print("after backfill pass (t=2):")
-for job in (hog, wide, short, too_long, short2):
-    print(f"  {job.jobid:>8s}  prio={job.priority}  {job.state.value:>9s}"
-          + (f"  (started t={job.start_time:.0f})"
-             if job.start_time is not None else ""))
+for h in (hog, wide, short, too_long, short2):
+    print(f"  {h.jobid:>8s}  prio={h.job.priority}  "
+          f"{h.state.value:>9s}"
+          + (f"  (started t={h.start_time:.0f})"
+             if h.start_time is not None else ""))
 assert short.state.value == "running" and short2.state.value == "running", \
     "short jobs should backfill into the free node"
 assert too_long.state.value == "pending", \
     "a 500s job would delay the wide job's t=100 reservation"
 
 # advance past the hog's end: the wide job starts at its reservation
-q.advance(200.0)
+inst.advance(200.0)
 print(f"\nwide job started at t={wide.start_time:.0f} "
       f"(reserved t=100), waited {wide.wait_time:.0f}s")
 
-q.drain()
-s = q.stats()
+# wait() on a SimClock instance drives the queue to completion
+assert too_long.wait().value == "completed"
+inst.drain()
+s = inst.stats()
 print(f"\nreplay done: {s.completed}/{s.submitted} completed, "
       f"utilization {s.utilization:.1%}, mean wait {s.mean_wait:.1f}s")
-print("\nevent log:")
-for line in q.events:
-    print(" ", line)
-assert sched.graph.validate_tree()
+print("\nevent journal (cursor replay from 0):")
+events, _cursor = inst.events_since(0)
+for ev in events:
+    print(f"  #{ev.seq:<3d} t={ev.t:7.1f}  {ev.type.value:>8s}  "
+          f"{ev.jobid}")
+assert inst.scheduler.graph.validate_tree()

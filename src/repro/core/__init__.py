@@ -12,6 +12,8 @@ from .queue import (Clock, Job, JobQueue, JobState, QueueStats, SimClock,
 from .policy import (POLICIES, ConservativeBackfill, EasyBackfill, FCFS,
                      FirstFit, PreemptivePriority, PriorityFCFS,
                      SchedulingPolicy, make_policy)
+from .events import EventLog, EventType, JobEvent
+from .api import Instance, JobHandle, RemoteInstance, RemoteJobHandle
 from .tenancy import FairShareArbiter, MultiTenantTree, TenantSpec
 from .external import (AWS_ZONES, TABLE3_CATALOG, ExternalProvider,
                        InstanceType, ProvisionResult, SimulatedEC2Provider,
@@ -26,6 +28,8 @@ __all__ = [
     "SchedulerInstance", "TreeSpec", "build_chain", "build_tree",
     "Clock", "Job", "JobQueue", "JobState", "QueueStats", "SimClock",
     "WallClock", "MethodRegistry",
+    "EventLog", "EventType", "JobEvent",
+    "Instance", "JobHandle", "RemoteInstance", "RemoteJobHandle",
     "POLICIES", "ConservativeBackfill", "EasyBackfill", "FCFS",
     "FirstFit", "PreemptivePriority", "PriorityFCFS", "SchedulingPolicy",
     "make_policy", "FairShareArbiter", "MultiTenantTree", "TenantSpec",

@@ -46,6 +46,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from .events import EventType
 from .graph import CONTAINMENT
 from .jobspec import Jobspec
 from .match import Matcher
@@ -156,9 +157,12 @@ class GrowEngine:
     The host must expose: ``name``, ``graph``, ``parent`` (Transport or
     None), ``children`` (name -> Transport), ``external``,
     ``external_at_any_level``, ``allocations``, ``timings``,
-    ``external_paths``.  ``SchedulerInstance`` is the only host today;
-    the indirection is what lets the caller and RPC-server sides share
-    one implementation.
+    ``external_paths``, ``spliced_paths``, ``lock`` (an RLock guarding
+    local mutations — the engine acquires it per stage, never across a
+    transport call), and optionally ``eventlog`` (typed GROW/REVOKE
+    events).  ``SchedulerInstance`` is the only host today; the
+    indirection is what lets the caller and RPC-server sides share one
+    implementation.
     """
 
     def __init__(self, host) -> None:
@@ -183,18 +187,24 @@ class GrowEngine:
         rec = MGTiming(level=host.name, jobid=jobid,
                        request_size=jobspec.graph_size())
 
-        # 1. local match (MATCHALLOCATE with grow semantics)
+        # 1. local match (MATCHALLOCATE with grow semantics) — the lock
+        # spans match + allocate so two concurrent MGs cannot claim the
+        # same free vertices (the lock is per-stage, never held across
+        # a transport call; see SchedulerInstance.lock)
         t0 = time.perf_counter()
-        matcher = Matcher(host.graph)
-        paths = matcher.match(jobspec)
-        rec.t_match = time.perf_counter() - t0
+        with host.lock:
+            matcher = Matcher(host.graph)
+            paths = matcher.match(jobspec)
+            rec.t_match = time.perf_counter() - t0
+            if paths is not None:
+                host.graph.set_allocated(paths, jobid)
+                self._book(jobid, paths)
+                sub = host.graph.extract(paths)
         if paths is not None:
-            host.graph.set_allocated(paths, jobid)
-            self._book(jobid, paths)
-            sub = host.graph.extract(paths)
             rec.matched_locally = True
             rec.matched_size = sub.size
             host.timings.append(rec)
+            self._emit_grow(jobid, "local", sub.size)
             return GrowResult(
                 True, new_paths=list(paths), size=sub.size, via="local",
                 timing=rec,
@@ -237,6 +247,15 @@ class GrowEngine:
         alloc.paths.extend(paths)
         return alloc
 
+    def _emit_grow(self, jobid: str, via: str, size: int,
+                   victims: Optional[List[str]] = None) -> None:
+        """Typed GROW event into the host's event log, if one is wired
+        (grow/shrink are first-class observable operations)."""
+        log = getattr(self.host, "eventlog", None)
+        if log is not None:
+            log.emit(EventType.GROW, jobid, via=via, size=size,
+                     victims=list(victims or ()))
+
     def _reclaim_from_children(self, jobspec: Jobspec, jobid: str,
                                requester: Optional[str], rec: MGTiming,
                                encode: bool, preempt: bool = False,
@@ -272,20 +291,23 @@ class GrowEngine:
             # genuinely new (e.g. the donor's own external resources)
             # is added like a parent-matched subgraph.
             t0 = time.perf_counter()
-            tres = splice_jgf(host.graph, jgf)
-            update_metadata(host.graph, tres, jobid=jobid)
-            host.graph.reassign(donated, jobid)
+            with host.lock:
+                tres = splice_jgf(host.graph, jgf)
+                update_metadata(host.graph, tres, jobid=jobid)
+                host.graph.reassign(donated, jobid)
+                # vertices the donor held that we did not (e.g. its own
+                # external resources) only live here for this job
+                host.spliced_paths.update(tres.new_paths)
+                self._book(jobid, donated)
             rec.t_add_upd += time.perf_counter() - t0
             rec.matched_size = len(jgf["graph"]["nodes"]) + \
                 len(jgf["graph"].get("edges", []))
             rec.ancestors_updated = tres.ancestors_updated
             rec.via_sibling = name
             rec.n_victims = len(victims)
-            # vertices the donor held that we did not (e.g. its own
-            # external resources) only live here for this job
-            host.spliced_paths.update(tres.new_paths)
-            self._book(jobid, donated)
             host.timings.append(rec)
+            self._emit_grow(jobid, f"sibling:{name}", rec.matched_size,
+                            victims)
             if victims:
                 # ride inside the JGF payload so intermediate levels
                 # forward it verbatim; splice_jgf only reads "graph"
@@ -350,28 +372,34 @@ class GrowEngine:
         data = json.loads(resp)
         victims: List[str] = data.get("victims", [])
         rec.n_victims = len(victims)
-        tres = splice_jgf(host.graph, data)
-        if self._aliased(data, tres, jobid):
-            # vertices the ancestor matched (and allocated to the job)
-            # already exist here: the hierarchy's path namespaces alias
-            # (subgraph-inclusion discipline broken upstream).  Booking
-            # this grow would double-use local vertices and strand the
-            # ancestor's allocation on release — undo and fail instead.
-            rec.t_add_upd = time.perf_counter() - t0
-            if tres.new_paths:          # roll the partial splice back
-                update_metadata(host.graph, tres)
-                remove_subgraph(host.graph, list(tres.new_paths))
+        with host.lock:
+            tres = splice_jgf(host.graph, data)
+            aliased = self._aliased(data, tres, jobid)
+            if aliased:
+                # vertices the ancestor matched (and allocated to the
+                # job) already exist here: the hierarchy's path
+                # namespaces alias (subgraph-inclusion discipline broken
+                # upstream).  Booking this grow would double-use local
+                # vertices and strand the ancestor's allocation on
+                # release — undo and fail instead.
+                rec.t_add_upd = time.perf_counter() - t0
+                if tres.new_paths:      # roll the partial splice back
+                    update_metadata(host.graph, tres)
+                    remove_subgraph(host.graph, list(tres.new_paths))
+            else:
+                update_metadata(host.graph, tres, jobid=jobid)
+                rec.t_add_upd = time.perf_counter() - t0
+                host.spliced_paths.update(tres.new_paths)
+                self._book(jobid, tres.new_paths)
+        if aliased:
             host.parent.call("release", pack_json(
                 {"jobid": jobid, "paths": _jgf_paths(data)}))
             host.timings.append(rec)
             return GrowResult(False, timing=rec)
-        update_metadata(host.graph, tres, jobid=jobid)
-        rec.t_add_upd = time.perf_counter() - t0
         rec.matched_size = tres.total_size
         rec.ancestors_updated = tres.ancestors_updated
-        host.spliced_paths.update(tres.new_paths)
-        self._book(jobid, tres.new_paths)
         host.timings.append(rec)
+        self._emit_grow(jobid, "parent", tres.total_size, victims)
         return GrowResult(
             True, new_paths=list(tres.new_paths), size=tres.total_size,
             via="parent", timing=rec, jgf=bytes(resp),  # verbatim
@@ -390,14 +418,16 @@ class GrowEngine:
             return None
         rec.external = True
         t0 = time.perf_counter()
-        tres = add_subgraph(host.graph, result.subgraph)
-        update_metadata(host.graph, tres, jobid=jobid)
+        with host.lock:
+            tres = add_subgraph(host.graph, result.subgraph)
+            update_metadata(host.graph, tres, jobid=jobid)
+            self._book(jobid, tres.new_paths)
+            host.external_paths.update(tres.new_paths)
         rec.t_add_upd = time.perf_counter() - t0
         rec.matched_size = result.subgraph.size
         rec.ancestors_updated = tres.ancestors_updated
-        self._book(jobid, tres.new_paths)
-        host.external_paths.update(tres.new_paths)
         host.timings.append(rec)
+        self._emit_grow(jobid, "external", result.subgraph.size)
         return GrowResult(
             True, new_paths=list(tres.new_paths), size=result.subgraph.size,
             via="external", timing=rec,
@@ -416,15 +446,16 @@ class GrowEngine:
         None when nothing matches.
         """
         host = self.host
-        matcher = Matcher(host.graph)
-        paths = matcher.match(jobspec)
-        if paths is None:
-            return None
-        sub = host.graph.extract(paths)     # extract while still free
-        remove_subgraph(host.graph, list(paths))
-        host.spliced_paths.difference_update(paths)
-        host.external_paths.difference_update(paths)
-        return {"paths": list(paths), "jgf": sub.to_jgf()}
+        with host.lock:
+            matcher = Matcher(host.graph)
+            paths = matcher.match(jobspec)
+            if paths is None:
+                return None
+            sub = host.graph.extract(paths)  # extract while still free
+            remove_subgraph(host.graph, list(paths))
+            host.spliced_paths.difference_update(paths)
+            host.external_paths.difference_update(paths)
+            return {"paths": list(paths), "jgf": sub.to_jgf()}
 
     def revoke(self, jobspec: Jobspec, priority: int) -> Optional[Dict]:
         """Preemptive variant of :meth:`reclaim`.
@@ -470,37 +501,52 @@ class GrowEngine:
         if out is not None:
             out["victims"] = []
             return out
-        candidates = [a for a in host.allocations.values()
-                      if a.preemptible and a.priority < priority]
-        if not candidates:
-            return None
-        # feasibility precheck over the pruning aggregates: free counts
-        # plus every candidate's *donatable* vertices must cover the
-        # request per type, else eviction would displace work for
-        # nothing the requester could ever receive from here
-        avail = dict()
-        for root in host.graph.roots:
-            for t, n in host.graph.vertex(root).agg_free.items():
-                avail[t] = avail.get(t, 0) + n
-        for alloc in candidates:
-            for t, n in donatable(alloc).items():
-                avail[t] = avail.get(t, 0) + n
-        if any(n > avail.get(t, 0)
-               for t, n in jobspec.type_counts().items()):
-            return None
-        # lowest priority first; newest first within a priority (later-
-        # started work is the cheaper loss)
-        order = {id(a): i for i, a in enumerate(host.allocations.values())}
-        candidates.sort(key=lambda a: (a.priority, -order[id(a)]))
+        # candidate selection + feasibility under the lock; the actual
+        # evictions below re-check per victim and lock per stage, so
+        # the lock is NEVER held across host.release's parent RPC (the
+        # invariant that keeps parent<->child locking cycle-free)
+        with host.lock:
+            candidates = [a for a in host.allocations.values()
+                          if a.preemptible and a.priority < priority]
+            if not candidates:
+                return None
+            # feasibility precheck over the pruning aggregates: free
+            # counts plus every candidate's *donatable* vertices must
+            # cover the request per type, else eviction would displace
+            # work for nothing the requester could ever receive
+            avail: Dict[str, int] = {}
+            for root in host.graph.roots:
+                for t, n in host.graph.vertex(root).agg_free.items():
+                    avail[t] = avail.get(t, 0) + n
+            for alloc in candidates:
+                for t, n in donatable(alloc).items():
+                    avail[t] = avail.get(t, 0) + n
+            if any(n > avail.get(t, 0)
+                   for t, n in jobspec.type_counts().items()):
+                return None
+            # lowest priority first; newest first within a priority
+            # (later-started work is the cheaper loss)
+            order = {id(a): i
+                     for i, a in enumerate(host.allocations.values())}
+            candidates.sort(key=lambda a: (a.priority, -order[id(a)]))
         victims: List[str] = []
         for alloc in candidates:
-            gap = deficit()
-            if gap and not any(t in gap for t in donatable(alloc)):
+            with host.lock:
+                if alloc.jobid not in host.allocations:
+                    continue    # concurrently released: nothing to evict
+                gap = deficit()
+                useless = gap and not any(t in gap
+                                          for t in donatable(alloc))
+                freed = list(alloc.paths)
+            if useless:
                 continue        # evicting this one cannot close the gap
             jobid = alloc.jobid
-            freed = list(alloc.paths)
             host.release(jobid)
             victims.append(jobid)
+            log = getattr(host, "eventlog", None)
+            if log is not None:
+                log.emit(EventType.REVOKE, jobid, n_paths=len(freed),
+                         priority=priority)
             for fn in getattr(host, "revoke_listeners", ()):
                 fn(jobid, freed)
             out = self.reclaim(jobspec)

@@ -1,0 +1,160 @@
+"""Typed job-event log: the observable surface of the dynamic model.
+
+"Design Principles of Dynamic Resource Management" argues that dynamic
+resource changes (grow/shrink/preempt) must be first-class, observable
+operations of the API — not side effects a consumer infers by polling
+state.  This module is that surface: every lifecycle transition the
+queue, the MATCHGROW engine, or a scheduler instance performs is
+appended to an :class:`EventLog` as a typed :class:`JobEvent`, and
+consumers observe it two ways:
+
+* **callback subscription** (``subscribe``) — live push, for wall-clock
+  consumers (orchestrators, autoscalers) that react as events happen;
+* **cursor-based replay** (``since``) — pull, for simulated consumers
+  and remote clients: read everything after a cursor, remember the new
+  cursor, repeat.  Replay returns exactly the same sequence a live
+  subscriber saw (bounded by ``maxlen``), so the two modes are
+  interchangeable and events ride transports as plain dicts.
+
+Events carry a global monotonic ``seq``; appends are serialized under a
+lock, so the log is a total order — in particular a total order per
+job, which is what consumers reason about (SUBMIT < ALLOC < START <
+... < FREE for one jobid).
+
+Emission map (who appends what):
+
+* ``JobQueue`` — SUBMIT, ALLOC (resources bound), START, PREEMPT
+  (requeued), SHRINK (malleable shrink through the queue), FREE
+  (terminal: completed or cancelled), EXCEPTION (rejected operation).
+* ``GrowEngine`` — GROW on every successful MATCHGROW at the emitting
+  instance (detail carries ``via``: local / sibling / parent /
+  external), REVOKE per evicted victim on the donor.
+* ``SchedulerInstance`` — RELEASE when an allocation (or a slice of
+  one) is handed back.  Scheduler-level events are keyed by the
+  *allocation* id; queue-level events by the *job* id (several jobs
+  may share one allocation).
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class EventType(enum.Enum):
+    SUBMIT = "submit"        # job entered the queue
+    ALLOC = "alloc"          # resources bound to the job
+    START = "start"          # job began running
+    GROW = "grow"            # allocation grew (MATCHGROW succeeded)
+    SHRINK = "shrink"        # allocation shrank (subtractive transform)
+    PREEMPT = "preempt"      # job displaced and requeued
+    REVOKE = "revoke"        # hierarchy evicted an allocation
+    RELEASE = "release"      # resources handed back to the pool
+    FREE = "free"            # job reached a terminal state
+    EXCEPTION = "exception"  # operation rejected / failed
+
+
+@dataclass(frozen=True)
+class JobEvent:
+    """One typed lifecycle event.  ``detail`` must stay JSON-serializable
+    so events ride ``SocketTransport`` unchanged."""
+
+    seq: int
+    t: float
+    type: EventType
+    jobid: str
+    detail: Dict = field(default_factory=dict)
+
+    def to_dict(self) -> Dict:
+        return {"seq": self.seq, "t": self.t, "type": self.type.value,
+                "jobid": self.jobid, "detail": dict(self.detail)}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "JobEvent":
+        return cls(seq=d["seq"], t=d["t"], type=EventType(d["type"]),
+                   jobid=d["jobid"], detail=dict(d.get("detail", {})))
+
+
+class EventLog:
+    """Append-only, bounded, thread-safe event log with live
+    subscription and cursor-based replay.
+
+    A cursor is simply "the seq after the last event I saw": ``since(c)``
+    returns every retained event with ``seq >= c`` plus the next cursor.
+    ``maxlen`` bounds retention; a cursor older than the retained window
+    resumes from the oldest retained event (consumers that must never
+    miss events should subscribe, or poll faster than they fall behind).
+    """
+
+    def __init__(self, clock=None, maxlen: int = 100_000):
+        self.clock = clock              # optional: stamps emit(t=None)
+        self.maxlen = maxlen
+        self._events: List[JobEvent] = []
+        self._base = 0                  # seq of _events[0]
+        self._next = 0                  # next seq to assign
+        # re-entrant: subscribers run under the lock (so live delivery
+        # order always equals seq/replay order even with concurrent
+        # emitters) and may themselves emit or subscribe
+        self._lock = threading.RLock()
+        self._subscribers: List[Callable[[JobEvent], None]] = []
+
+    # ------------------------------------------------------------------ #
+    def emit(self, type: EventType, jobid: str,
+             t: Optional[float] = None, **detail) -> JobEvent:
+        """Append one event (stamped with ``t``, or the log's clock, or
+        0.0) and push it to live subscribers."""
+        if t is None:
+            t = self.clock.now() if self.clock is not None else 0.0
+        with self._lock:
+            ev = JobEvent(seq=self._next, t=t, type=type, jobid=jobid,
+                          detail=detail)
+            self._next += 1
+            self._events.append(ev)
+            if len(self._events) > self.maxlen:
+                drop = len(self._events) - self.maxlen
+                del self._events[:drop]
+                self._base += drop
+            # deliver under the lock: a concurrent emitter must not be
+            # able to reorder live delivery relative to seq order (the
+            # replay==live guarantee); the RLock keeps re-entrant
+            # emits from subscribers safe
+            for cb in list(self._subscribers):
+                cb(ev)
+        return ev
+
+    # ------------------------------------------------------------------ #
+    def since(self, cursor: int = 0) -> Tuple[List[JobEvent], int]:
+        """Replay: events with ``seq >= cursor`` (oldest retained if the
+        cursor fell behind) and the cursor to pass next time."""
+        with self._lock:
+            lo = max(cursor - self._base, 0)
+            out = list(self._events[lo:])
+            return out, self._next
+
+    def for_job(self, jobid: str) -> List[JobEvent]:
+        with self._lock:
+            return [e for e in self._events if e.jobid == jobid]
+
+    def subscribe(self, cb: Callable[[JobEvent], None]
+                  ) -> Callable[[], None]:
+        """Register a live callback; returns an unsubscribe function."""
+        with self._lock:
+            self._subscribers.append(cb)
+
+        def unsubscribe() -> None:
+            with self._lock:
+                if cb in self._subscribers:
+                    self._subscribers.remove(cb)
+        return unsubscribe
+
+    # ------------------------------------------------------------------ #
+    def __len__(self) -> int:
+        with self._lock:
+            return self._next
+
+    @property
+    def cursor(self) -> int:
+        """The cursor pointing just past the newest event."""
+        with self._lock:
+            return self._next

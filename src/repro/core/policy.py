@@ -21,8 +21,11 @@ Implementations:
 * :class:`EasyBackfill` — PriorityFCFS order + EASY backfill: the
   blocked head gets a reservation at its shadow time (estimated from
   the pruning aggregates and running jobs' end times), and later jobs
-  may jump ahead only if they finish before it.  The queue's default —
-  this is the pre-refactor behavior, bit for bit.
+  jump ahead if they finish before it — or, with the default
+  ``spare_capacity`` refinement, if a one-job reservation profile
+  proves they cannot touch the head's reservation at all.  The
+  queue's default; ``EasyBackfill(spare_capacity=False)`` is the
+  strict single-shadow (pre-refinement) rule.
 * :class:`ConservativeBackfill` — every pending job ahead of a
   candidate keeps its reservation: the candidate is admitted only if a
   count-based reservation profile shows no reservation moving later.
@@ -86,26 +89,55 @@ class PriorityFCFS(SchedulingPolicy):
 
 
 class EasyBackfill(PriorityFCFS):
-    """EASY: only the head holds a reservation (its shadow time)."""
+    """EASY: only the head holds a reservation (its shadow time).
+
+    Refinement (``spare_capacity``, default on): a candidate that ends
+    *after* the shadow time is still admitted when a one-job
+    reservation profile proves it cannot touch the head's reservation
+    — it runs on capacity the head's shadow-time credit never needs
+    (the admission conservative backfill makes, restricted to the
+    head).  A structurally blocked head (counts suffice but the match
+    fails) keeps the strict rule: the count-based profile cannot see
+    structural conflicts, so nothing may jump such a head."""
 
     name = "easy"
+
+    def __init__(self, spare_capacity: bool = True):
+        self.spare_capacity = spare_capacity
 
     def backfill(self, queue: "JobQueue", head: "Job") -> int:
         now = queue.clock.now()
         shadow = shadow_time(queue, head)
+        structural = not _deficit(queue, head)
         started = 0
         for job in list(queue.pending[1:]):
             if job.walltime is None:
                 continue            # unbounded jobs can never backfill
             if shadow is not None and now + job.walltime > shadow:
-                continue            # would delay the head's reservation
+                # would overlap the head's reservation window: admit
+                # only if provably on spare capacity
+                if structural or not self.spare_capacity \
+                        or _cannot_fit(queue, job) \
+                        or self._delays_head(queue, head, job, shadow):
+                    continue
             if _cannot_fit(queue, job):
                 continue
             if queue.start_if_fits(job):
                 queue._log(f"t={now:.3f} backfill {job.jobid} ahead of "
                            f"{head.jobid} (shadow={shadow})")
                 started += 1
+                # availability changed: the shadow may have moved
+                shadow = shadow_time(queue, head)
+                structural = not _deficit(queue, head)
         return started
+
+    @staticmethod
+    def _delays_head(queue: "JobQueue", head: "Job", job: "Job",
+                     shadow: float) -> bool:
+        """Would hypothetically running ``job`` move the head's
+        reservation past its shadow time?"""
+        prof = reservation_profile(queue, [head], hypothetical=job)
+        return _later(prof.get(head.jobid), shadow)
 
 
 class ConservativeBackfill(PriorityFCFS):

@@ -32,6 +32,16 @@ Mechanism, in this file:
   ``revoke_listeners``; when the hierarchy evicts one of its
   allocations, every affected job is requeued PREEMPTED → PENDING and
   rescheduled on the next step.
+* **Malleable grow/shrink** — ``grow_job``/``shrink_job`` resize a
+  RUNNING job's allocation through the same MATCHGROW / release paths,
+  keeping job paths, scheduler allocations, and utilization integrals
+  in exact agreement (this is how ``ElasticRuntime`` resizes training
+  jobs, so training and batch work share one lifecycle).
+* **Typed events** — every transition is appended to the queue's
+  ``EventLog`` (``core/events.py``); the scheduler and the MATCHGROW
+  engine emit into the same log (RELEASE, GROW, REVOKE), so consumers
+  of the ``Instance`` facade (``core/api.py``) observe the whole story
+  by live subscription or cursor replay instead of polling state.
 
 Policy, delegated (see ``core/policy.py``):
 
@@ -50,6 +60,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from .events import EventLog, EventType
 from .jobspec import Jobspec
 from .policy import EasyBackfill, PriorityFCFS, SchedulingPolicy
 from .scheduler import SchedulerInstance
@@ -172,7 +183,8 @@ class JobQueue:
                  clock: Optional[Clock] = None,
                  backfill: bool = True,
                  allow_grow: bool = False,
-                 policy: Optional[SchedulingPolicy] = None):
+                 policy: Optional[SchedulingPolicy] = None,
+                 eventlog: Optional[EventLog] = None):
         self.scheduler = scheduler
         self.clock = clock or WallClock()
         if policy is None:
@@ -185,6 +197,12 @@ class JobQueue:
         self.completed: List[Job] = []
         self.events: List[str] = []
         self.max_events = 10_000        # bounded history for long runs
+        # typed event surface (core/events.py): the queue, the engine,
+        # and the scheduler all emit into one log per queue, so every
+        # consumer observes the same total order
+        self.eventlog = eventlog or EventLog(clock=self.clock)
+        if scheduler.eventlog is None:
+            scheduler.eventlog = self.eventlog
         self.n_preemptions = 0
         self._seq = itertools.count()
         self._by_id: Dict[str, Job] = {}
@@ -230,6 +248,8 @@ class JobQueue:
         self.pending.append(job)
         self.pending.sort(key=self.policy.sort_key)
         self._log(f"t={job.submit_time:.3f} submit {jobid}")
+        self.eventlog.emit(EventType.SUBMIT, jobid, alloc_id=job.alloc_id,
+                           priority=priority, walltime=walltime)
         return job
 
     def dispatch(self, jobspec: Jobspec, walltime: Optional[float] = None,
@@ -264,6 +284,9 @@ class JobQueue:
             self._by_id.pop(jobid, None)
             self._version += 1
             job.state = JobState.CANCELLED
+            self.eventlog.emit(EventType.FREE, jobid,
+                               state=JobState.CANCELLED.value,
+                               alloc_id=job.alloc_id)
             return True
         if job.state is JobState.RUNNING:
             self._accrue()
@@ -377,6 +400,8 @@ class JobQueue:
         self._sync_alloc_meta(job.alloc_id)
         self._version += 1
         self._log(f"t={self.clock.now():.3f} {state.value} {job.jobid}")
+        self.eventlog.emit(EventType.FREE, job.jobid, state=state.value,
+                           alloc_id=job.alloc_id)
 
     def _try_start(self, job: Job) -> bool:
         sched = self.scheduler
@@ -402,6 +427,8 @@ class JobQueue:
                 return False
             job.paths = list(alloc.paths[n_prev:])
             job.via = "local"
+        self.eventlog.emit(EventType.ALLOC, job.jobid, via=job.via,
+                           n_paths=len(job.paths), alloc_id=job.alloc_id)
         return True
 
     def _activate(self, job: Job) -> None:
@@ -419,6 +446,8 @@ class JobQueue:
         self._version += 1
         self._log(f"t={now:.3f} start {job.jobid} via={job.via} "
                   f"wait={job.wait_time:.3f}")
+        self.eventlog.emit(EventType.START, job.jobid, via=job.via,
+                           wait=job.wait_time, alloc_id=job.alloc_id)
 
     def start_if_fits(self, job: Job) -> bool:
         """Policy entry point: try to start one pending job now."""
@@ -426,6 +455,69 @@ class JobQueue:
             self._activate(job)
             return True
         return False
+
+    # ------------------------------------------------------------------ #
+    # malleable operations: grow/shrink a RUNNING job's allocation
+    # ------------------------------------------------------------------ #
+    def grow_job(self, jobid: str, jobspec: Jobspec) -> bool:
+        """Grow a RUNNING job's allocation by ``jobspec`` (MATCHGROW
+        through the hierarchy; the engine emits the GROW event).  The
+        grown vertices join the job's ``paths``, so utilization and
+        release accounting stay exact."""
+        job = self._by_id.get(jobid)
+        if job is None or job.state is not JobState.RUNNING:
+            self.eventlog.emit(EventType.EXCEPTION, jobid, op="grow",
+                               reason="job not running")
+            return False
+        self._accrue()
+        res = self.scheduler.match_grow(jobspec, job.alloc_id,
+                                        priority=job.priority,
+                                        preempt=self.policy.preemptive)
+        if not res:
+            return False
+        job.paths.extend(res.paths())
+        if res.victims:
+            self._log(f"t={self.clock.now():.3f} {job.jobid} "
+                      f"revoked {','.join(res.victims)}")
+        self._sync_alloc_meta(job.alloc_id)
+        self._version += 1
+        self._log(f"t={self.clock.now():.3f} grow {job.jobid} "
+                  f"+{len(res.new_paths)} via={res.via}")
+        return True
+
+    def shrink_job(self, jobid: str, paths: Optional[List[str]] = None,
+                   count: Optional[int] = None) -> bool:
+        """Shrink a RUNNING job's allocation: release ``paths`` (or the
+        newest ``count`` of the job's paths) back through the scheduler
+        — local vertices return to the free pool, spliced-in/external
+        copies leave bottom-up — and keep the job running on the rest.
+        The queue's accounting (``paths``, utilization integrals, the
+        scheduler allocation) stays consistent; shrinking a job to
+        nothing is refused (cancel it instead)."""
+        job = self._by_id.get(jobid)
+        if job is None or job.state is not JobState.RUNNING:
+            self.eventlog.emit(EventType.EXCEPTION, jobid, op="shrink",
+                               reason="job not running")
+            return False
+        if paths is None:
+            paths = job.paths[-count:] if count else []
+        doomed = [p for p in paths if p in job.paths]
+        if not doomed or len(doomed) >= len(job.paths):
+            self.eventlog.emit(EventType.EXCEPTION, jobid, op="shrink",
+                               reason="would shrink to nothing"
+                               if doomed else "no owned paths given")
+            return False
+        self._accrue()
+        self.scheduler.release(job.alloc_id, doomed)
+        gone = set(doomed)
+        job.paths = [p for p in job.paths if p not in gone]
+        self._sync_alloc_meta(job.alloc_id)
+        self._version += 1
+        self._log(f"t={self.clock.now():.3f} shrink {job.jobid} "
+                  f"-{len(doomed)}")
+        self.eventlog.emit(EventType.SHRINK, job.jobid,
+                           n_paths=len(doomed), alloc_id=job.alloc_id)
+        return True
 
     def _sync_alloc_meta(self, alloc_id: str) -> None:
         """Propagate job priorities to the scheduler allocation so the
@@ -478,6 +570,8 @@ class JobQueue:
         self._version += 1
         self._log(f"t={now:.3f} preempt {job.jobid} "
                   f"(n={job.preemptions})")
+        self.eventlog.emit(EventType.PREEMPT, job.jobid,
+                           alloc_id=job.alloc_id, n=job.preemptions)
 
     def kick(self) -> None:
         """Force the next step() to re-attempt scheduling even though

@@ -30,10 +30,12 @@ Figures 1/3/4 and its analytical model (Section 6):
 from __future__ import annotations
 
 import itertools
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .engine import Allocation, GrowEngine, GrowResult, MGTiming
+from .events import EventType
 from .external import ExternalProvider
 from .graph import ResourceGraph
 from .jobspec import Jobspec
@@ -82,6 +84,18 @@ class SchedulerInstance:
         # optional weighted fair-share arbiter (core/tenancy.py): gates
         # which child subtree may preempt which sibling's work
         self.arbiter = None
+        # typed event sink (core/events.py), set by the owning JobQueue
+        # or Instance: RELEASE is emitted here, GROW/REVOKE by the
+        # engine.  Scheduler-level events are keyed by allocation id.
+        self.eventlog = None
+        # per-instance mutation lock: RPCServer sessions run in their
+        # own threads and SocketTransport pools connections, so
+        # concurrent MG/release/revoke requests can hit one instance at
+        # once.  The lock guards LOCAL graph/allocation mutations only
+        # — never held across a transport call (a parent routing to a
+        # child while the child escalates to the parent would deadlock
+        # otherwise).  RLock: revoke releases victims re-entrantly.
+        self.lock = threading.RLock()
         self.methods = MethodRegistry()
         self.methods.register("match_grow", self._rpc_match_grow)
         self.methods.register("release", self._rpc_release)
@@ -154,12 +168,13 @@ class SchedulerInstance:
         """Occupancy snapshot for fair-share arbitration: vertices held
         by real jobs (delegation markers do not count as usage)."""
         from .graph import DELEGATION_PREFIX
-        allocated = sum(
-            1 for v in self.graph.vertices()
-            if any(not j.startswith(DELEGATION_PREFIX)
-                   for j in v.allocations))
-        return {"allocated": allocated,
-                "capacity": self.graph.num_vertices}
+        with self.lock:
+            allocated = sum(
+                1 for v in self.graph.vertices()
+                if any(not j.startswith(DELEGATION_PREFIX)
+                       for j in v.allocations))
+            return {"allocated": allocated,
+                    "capacity": self.graph.num_vertices}
 
     # ------------------------------------------------------------------ #
     # MATCHALLOCATE
@@ -171,14 +186,15 @@ class SchedulerInstance:
                        jobid: Optional[str] = None) -> Optional[Allocation]:
         """MA: match against the local graph; allocate on success."""
         jobid = jobid or self.new_jobid()
-        matcher = Matcher(self.graph)
-        paths = matcher.match(jobspec)
-        if paths is None:
-            return None
-        self.graph.set_allocated(paths, jobid)
-        alloc = self.allocations.setdefault(jobid, Allocation(jobid))
-        alloc.paths.extend(paths)
-        return alloc
+        with self.lock:
+            matcher = Matcher(self.graph)
+            paths = matcher.match(jobspec)
+            if paths is None:
+                return None
+            self.graph.set_allocated(paths, jobid)
+            alloc = self.allocations.setdefault(jobid, Allocation(jobid))
+            alloc.paths.extend(paths)
+            return alloc
 
     # ------------------------------------------------------------------ #
     # MATCHGROW (Algorithm 1, via the shared engine)
@@ -205,20 +221,22 @@ class SchedulerInstance:
         Bottom-up: remove locally first, then notify the parent so it
         can release (the parent keeps the vertices — they return to its
         free pool — unless they were external)."""
-        if remove_vertices:
-            res = remove_subgraph(self.graph, list(paths), jobid=jobid)
-            self.spliced_paths.difference_update(paths)
-            self.external_paths.difference_update(paths)
-        else:
-            self.graph.set_free(paths, jobid)
-            res = TransformResult(kind=TransformKind.SUBTRACTIVE)
-        alloc = self.allocations.get(jobid)
-        if alloc is not None:
-            doomed = set(paths)
-            alloc.paths = [p for p in alloc.paths
-                           if p not in doomed and self.graph.get(p) is not None]
-            if not alloc.paths:
-                self.allocations.pop(jobid, None)
+        with self.lock:
+            if remove_vertices:
+                res = remove_subgraph(self.graph, list(paths), jobid=jobid)
+                self.spliced_paths.difference_update(paths)
+                self.external_paths.difference_update(paths)
+            else:
+                self.graph.set_free(paths, jobid)
+                res = TransformResult(kind=TransformKind.SUBTRACTIVE)
+            alloc = self.allocations.get(jobid)
+            if alloc is not None:
+                doomed = set(paths)
+                alloc.paths = [p for p in alloc.paths
+                               if p not in doomed
+                               and self.graph.get(p) is not None]
+                if not alloc.paths:
+                    self.allocations.pop(jobid, None)
         if self.parent is not None:
             self.parent.call("release", pack_json(
                 {"jobid": jobid, "paths": list(paths)}))
@@ -233,29 +251,33 @@ class SchedulerInstance:
         parent frees its own copies in turn, all the way to the level
         that originally matched the subgraph.
         """
-        alloc = self.allocations.get(jobid)
-        if alloc is None:
-            return
-        target = list(paths) if paths is not None else list(alloc.paths)
-        present = [p for p in target if p in self.graph]
-        self.graph.set_free(present, jobid)
-        # external vertices disappear when their job releases them
-        ext = [p for p in present if p in self.external_paths]
-        if ext:
-            self._remove_departed(ext, jobid, self.external_paths)
-        # pass-through copies from parent/sibling grows likewise leave
-        # this graph instead of inflating the local free pool
-        spl = [p for p in present
-               if p in self.spliced_paths and p in self.graph]
-        if spl:
-            self._remove_departed(spl, jobid, self.spliced_paths)
-        if paths is None:
-            self.allocations.pop(jobid, None)
-        else:
-            doomed = set(target)
-            alloc.paths = [p for p in alloc.paths if p not in doomed]
-            if not alloc.paths:     # don't retain a record per dead job
+        with self.lock:
+            alloc = self.allocations.get(jobid)
+            if alloc is None:
+                return
+            target = list(paths) if paths is not None else list(alloc.paths)
+            present = [p for p in target if p in self.graph]
+            self.graph.set_free(present, jobid)
+            # external vertices disappear when their job releases them
+            ext = [p for p in present if p in self.external_paths]
+            if ext:
+                self._remove_departed(ext, jobid, self.external_paths)
+            # pass-through copies from parent/sibling grows likewise
+            # leave this graph instead of inflating the local free pool
+            spl = [p for p in present
+                   if p in self.spliced_paths and p in self.graph]
+            if spl:
+                self._remove_departed(spl, jobid, self.spliced_paths)
+            if paths is None:
                 self.allocations.pop(jobid, None)
+            else:
+                doomed = set(target)
+                alloc.paths = [p for p in alloc.paths if p not in doomed]
+                if not alloc.paths:  # don't retain a record per dead job
+                    self.allocations.pop(jobid, None)
+        if self.eventlog is not None and present:
+            self.eventlog.emit(EventType.RELEASE, jobid,
+                               n_paths=len(present))
         # propagate only when the release touched pass-through copies —
         # an ancestor can hold state for exactly those; purely local
         # jobs release without an RPC round trip per completion

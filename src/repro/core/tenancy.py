@@ -2,9 +2,10 @@
 
 The paper's Fig. 2 multi-user topology made operational: every tenant
 owns a sibling subtree of one parent instance (delegated down, so the
-parent's own free pool is empty) and runs its own
-:class:`~repro.core.queue.JobQueue` — with its own scheduling policy —
-against that subtree.  Resource flow between tenants goes through the
+parent's own free pool is empty) and fronts it with its own
+:class:`~repro.core.api.Instance` — with its own scheduling policy and
+its own event journal — so tenants submit, observe, and (when policy
+allows) preempt through the one public API, locally or remotely.  Resource flow between tenants goes through the
 parent's MATCHGROW sibling routing: free resources move via ``reclaim``,
 and, when a tenant's policy is preemptive, busy lower-priority resources
 move via ``revoke`` (the victim's queue requeues it PREEMPTED→PENDING).
@@ -21,6 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from .api import Instance
 from .graph import ResourceGraph
 from .policy import SchedulingPolicy
 from .queue import Clock, Job, JobQueue, SimClock
@@ -92,10 +94,18 @@ class MultiTenantTree:
                                           f"delegated-to-{t.name}")
         self.root.arbiter = FairShareArbiter(
             {t.name: t.weight for t in tenants})
-        self.queues: Dict[str, JobQueue] = {
-            t.name: JobQueue(self.hierarchy[t.name], clock=self.clock,
+        # every tenant fronts its subtree through the Instance facade:
+        # tenants submit and observe events through the one public API,
+        # and each tenant's surface is remotable (serve()) unchanged
+        self.instances: Dict[str, Instance] = {
+            t.name: Instance(self.hierarchy[t.name], clock=self.clock,
                              allow_grow=t.allow_grow, policy=t.policy)
             for t in tenants}
+        self.queues: Dict[str, JobQueue] = {
+            name: inst.queue for name, inst in self.instances.items()}
+
+    def instance(self, tenant: str) -> Instance:
+        return self.instances[tenant]
 
     def queue(self, tenant: str) -> JobQueue:
         return self.queues[tenant]

@@ -1,31 +1,39 @@
 """ElasticRuntime: scheduler allocations bound to JAX meshes.
 
 This is where the paper's control plane meets the data plane.  A
-training job holds a resource allocation (a subgraph of the hierarchical
-scheduler's resource graph).  Elasticity events map as:
+training job is one job submitted through the
+:class:`~repro.core.api.Instance` facade; it holds a resource
+allocation (a subgraph of the hierarchical scheduler's resource graph)
+for its whole life.  Elasticity events map as:
 
-* **grow**   — MATCHGROW via the scheduler hierarchy (bursting through
-  the External API if the local fleet is exhausted), then re-bind the
-  job to a larger mesh and re-shard the training state onto it;
-* **shrink** — MATCHSHRINK (bottom-up subtractive transform), re-bind
-  to a smaller mesh;
+* **grow**   — a malleable grow request *through the job queue*
+  (``JobHandle.grow``: MATCHGROW via the scheduler hierarchy, bursting
+  through the External API if the local fleet is exhausted, with a
+  typed GROW event flowing back), then re-bind the job to a larger
+  mesh and re-shard the training state onto it;
+* **shrink** — a malleable shrink request through the queue
+  (``JobHandle.shrink``: bottom-up release with exact queue/scheduler
+  accounting and a SHRINK event), re-bind to a smaller mesh;
 * **failure** — subtractive transform ejecting the failed node, then a
-  MATCHGROW for a replacement (spare pool first, then external), then
-  restore from the last checkpoint if the in-memory state was lost.
+  grow request for a replacement (spare pool first, then external),
+  then restore from the last checkpoint if in-memory state was lost.
 
-The data plane is re-jitted against the new mesh; parameters/optimizer
-move via ``jax.device_put`` with the new NamedShardings (topology-
-independent layout keyed by logical axes).
+Because growth and shrink ride the queue, training jobs and batch jobs
+share one lifecycle: the same events, the same accounting, the same
+preemption story.  The data plane is re-jitted against the new mesh;
+parameters/optimizer move via ``jax.device_put`` with the new
+NamedShardings (topology-independent layout keyed by logical axes).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import numpy as np
 
+from ..core.api import Instance, JobHandle
 from ..core.graph import ResourceGraph
 from ..core.jobspec import Jobspec
 from ..core.scheduler import SchedulerInstance
@@ -47,12 +55,18 @@ class ElasticEvent:
 class ElasticRuntime:
     """Bind a scheduler allocation to a mesh; survive resizes."""
 
-    def __init__(self, scheduler: SchedulerInstance, cfg: ArchConfig,
+    def __init__(self, scheduler: Union[SchedulerInstance, Instance],
+                 cfg: ArchConfig,
                  shape: ShapeConfig, jobid: str = "train-job",
                  model_axis: int = 1, chip_type: str = "core",
                  rules: Optional[Rules] = None,
                  opt: Optional[OptConfig] = None):
-        self.scheduler = scheduler
+        # everything control-plane goes through the Instance facade; a
+        # bare SchedulerInstance (back-compat) is wrapped in one
+        self.api = scheduler if isinstance(scheduler, Instance) \
+            else Instance(scheduler)
+        self.scheduler = self.api.scheduler
+        self.handle: Optional[JobHandle] = None
         self.cfg = cfg
         self.shape = shape
         self.jobid = jobid
@@ -122,18 +136,29 @@ class ElasticRuntime:
 
     # ---------------------------------------------------------------- #
     def allocate(self, chips: int) -> bool:
+        """Submit the training job (strictly local MATCHALLOCATE for
+        the initial placement; it runs until cancelled)."""
         from ..core.jobspec import ResourceReq
         js = Jobspec(resources=[ResourceReq(self.chip_type, chips)])
-        alloc = self.scheduler.match_allocate(js, jobid=self.jobid)
-        return alloc is not None
+        self.handle = self.api.submit(js, jobid=self.jobid,
+                                      alloc_id=self.jobid, grow=False,
+                                      dispatch=True)
+        from ..core.queue import JobState
+        if self.handle.state is not JobState.RUNNING:
+            self.handle.cancel()
+            self.handle = None
+            return False
+        return True
 
     def grow(self, chips: int) -> bool:
-        """MATCHGROW more chips, rebind, re-shard."""
+        """Malleable grow through the queue: MATCHGROW more chips (with
+        a GROW event flowing back), rebind, re-shard."""
         from ..core.jobspec import ResourceReq
+        if self.handle is None:
+            return False
         before = self.chips_allocated()
         js = Jobspec(resources=[ResourceReq(self.chip_type, chips)])
-        sub = self.scheduler.match_grow(js, self.jobid)
-        if not sub:
+        if not self.handle.grow(js):
             return False
         self.events.append(ElasticEvent(
             "grow", time.time(), before, self.chips_allocated(),
@@ -142,7 +167,11 @@ class ElasticRuntime:
         return True
 
     def shrink(self, chips: int) -> bool:
-        """Relinquish ``chips`` chips (bottom-up subtractive transform)."""
+        """Malleable shrink through the queue: relinquish ``chips``
+        chips (bottom-up release, SHRINK event, queue accounting and
+        scheduler allocation kept in agreement)."""
+        if self.handle is None:
+            return False
         alloc = self.scheduler.allocations.get(self.jobid)
         if alloc is None:
             return False
@@ -152,9 +181,8 @@ class ElasticRuntime:
         if len(victims) - chips < self.model_axis:
             return False
         before = self.chips_allocated()
-        self.scheduler.match_shrink(self.jobid, victims[-chips:],
-                                    remove_vertices=False)
-        self.scheduler.release(self.jobid, victims[-chips:])
+        if not self.handle.shrink(paths=victims[-chips:]):
+            return False
         self.events.append(ElasticEvent(
             "shrink", time.time(), before, self.chips_allocated(),
             f"-{chips} {self.chip_type}"))
@@ -178,12 +206,18 @@ class ElasticRuntime:
         alloc = self.scheduler.allocations.get(self.jobid)
         if alloc is not None:
             alloc.paths = [p for p in alloc.paths if p in g]
+        if self.handle is not None:
+            # the failure mutated the graph out from under the queue:
+            # resync the job record so accounting stays exact
+            self.handle.job.paths = [p for p in self.handle.job.paths
+                                     if p in g]
         self.events.append(ElasticEvent(
             "eject", time.time(), before, self.chips_allocated(), node_path))
         ok = True
         if replace and lost:
             js = Jobspec(resources=[ResourceReq(self.chip_type, len(lost))])
-            ok = bool(self.scheduler.match_grow(js, self.jobid))
+            ok = bool(self.handle.grow(js)) if self.handle is not None \
+                else bool(self.scheduler.match_grow(js, self.jobid))
         self.bind()
         return ok
 

@@ -1,28 +1,27 @@
-"""KubeFlux-style orchestrator: replica sets over the job queue.
+"""KubeFlux-style orchestrator: replica sets over the Instance API.
 
 The paper's third capability — scheduling cloud-orchestration-framework
-tasks — as a first-class controller, reconciled *through the job
-lifecycle queue* (``core/queue.py``) rather than by calling the
-scheduler directly:
+tasks — as a first-class controller, reconciled entirely through the
+:class:`~repro.core.api.Instance` facade (submit/handle/event surface);
+it never touches ``JobQueue`` internals or the scheduler directly:
 
 * a ``ReplicaSet`` declares a pod-sized jobspec and a desired replica
-  count; every replica is a queue ``Job`` bound to the replica set's
-  single scheduler allocation (``alloc_id``), so scale-up is a submit
-  (MATCHALLOCATE for the first replica, MATCHGROW after) and scale-down
-  is a cancel (the queue's timed-release path: ``release`` /
-  ``match_shrink``),
+  count; every replica is a submitted job bound to the replica set's
+  single scheduler allocation (``alloc_id``), so scale-up is a
+  ``submit(dispatch=True)`` (MATCHALLOCATE for the first replica,
+  MATCHGROW after) and scale-down cancels the newest handle (the
+  queue's timed-release path),
 * replica jobs are **preemptible**: a higher-priority tenant's grow may
-  revoke the replica set's allocation through the hierarchy, and the
-  next ``reconcile`` observes the loss (the queue requeues the evicted
-  replicas PREEMPTED→PENDING; the reconciler drops those retries,
-  syncs the actual replica count, and re-dispatches against current
-  state — so revocation looks exactly like any other drift),
+  revoke the replica set's allocation through the hierarchy.  The
+  reconciler observes the loss from the *event journal* — it reads
+  PREEMPT events since its cursor (cursor-based replay, so nothing is
+  missed between reconcile ticks), drops the requeued retries, and
+  re-dispatches against current state — revocation looks exactly like
+  any other drift, and there is no state polling,
 * a ``BurstPolicy`` decides when scaling may spill to the External API
   (the paper notes Slurm/LSF gate bursting behind static cluster-wide
-  config; here it is a per-replica-set policy object, and per-USER
-  provider specialization falls out of attaching the provider to the
-  user's own scheduler instance) — the external-burst path rides the
-  queue's grow escalation,
+  config; here it is a per-replica-set policy object) — the
+  external-burst path rides the queue's grow escalation,
 * utilization-driven autoscaling (scale on a load signal between
   min/max replicas).
 """
@@ -30,8 +29,10 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
+from ..core.api import Instance, JobHandle
+from ..core.events import EventType
 from ..core.jobspec import Jobspec
 from ..core.queue import JobQueue, JobState
 from ..core.scheduler import SchedulerInstance
@@ -68,14 +69,33 @@ class ReplicaSet:
 
 
 class Orchestrator:
-    """Reconciles replica sets against a scheduler, via a JobQueue."""
+    """Reconciles replica sets against an :class:`Instance`.
 
-    def __init__(self, scheduler: SchedulerInstance,
+    Accepts an ``Instance`` directly, or (back-compat) a bare
+    ``SchedulerInstance`` / ``JobQueue`` which it wraps in one.
+    """
+
+    def __init__(self, api: Union[Instance, SchedulerInstance],
                  queue: Optional[JobQueue] = None):
-        self.scheduler = scheduler
-        self.queue = queue or JobQueue(scheduler, allow_grow=True)
+        if isinstance(api, Instance):
+            self.api = api
+        elif queue is not None:
+            self.api = Instance(queue=queue)
+        else:
+            self.api = Instance(api, allow_grow=True)
+        self.scheduler = self.api.scheduler
         self.replica_sets: Dict[str, ReplicaSet] = {}
         self._replica_seq = itertools.count()
+        # event-journal cursor: revocations are observed by replaying
+        # PREEMPT events appended since the last reconcile, never by
+        # polling queue state
+        self._cursor = self.api.events.cursor
+        self._revoked: Dict[str, List[str]] = {}   # alloc_id -> jobids
+
+    @property
+    def queue(self) -> JobQueue:
+        """The underlying queue (shared-queue consumers inspect it)."""
+        return self.api.queue
 
     def create(self, rs: ReplicaSet) -> ReplicaSet:
         self.replica_sets[rs.name] = rs
@@ -85,15 +105,15 @@ class Orchestrator:
     # ------------------------------------------------------------ #
     def reconcile(self, name: str) -> int:
         """Drive actual replicas toward desired.  Returns the delta
-        applied.  Scale-up submits one queue job per missing replica
-        (local resources preferred; external bursting gated by the
-        policy).  Scale-down cancels the newest replica jobs first
-        (external ones before local, so cloud cost drains first)."""
+        applied.  Scale-up submits one job per missing replica (local
+        resources preferred; external bursting gated by the policy).
+        Scale-down cancels the newest replica handles first (external
+        ones before local, so cloud cost drains first)."""
         rs = self.replica_sets[name]
         applied = 0
         self._observe_revocations(rs)
-        # scale up: one queue job per replica, sharing rs.jobid's
-        # allocation; the queue runs MA for the first and MG after
+        # scale up: one job per replica, sharing rs.jobid's allocation;
+        # the queue runs MA for the first and MG after
         while rs.replicas < rs.desired:
             external_before = len(self.scheduler.external_paths)
             # the first replica is pure MATCHALLOCATE (grow=False:
@@ -107,17 +127,17 @@ class Orchestrator:
                         rs.external_replicas):
                 self.scheduler.external = None
             try:
-                # dispatch, not submit+step: the reconciler must not be
-                # wedged behind an unrelated blocked job at the head of
-                # a shared queue
-                job = self.queue.dispatch(
+                # dispatch, not head-of-line submit: the reconciler must
+                # not be wedged behind an unrelated blocked job at the
+                # head of a shared queue
+                handle = self.api.submit(
                     rs.pod_spec, walltime=None, alloc_id=rs.jobid,
                     jobid=f"{rs.jobid}-r{next(self._replica_seq)}",
-                    grow=not first, preemptible=True)
+                    grow=not first, preemptible=True, dispatch=True)
             finally:
                 self.scheduler.external = provider
-            if job.state is not JobState.RUNNING:
-                self.queue.cancel(job.jobid)
+            if handle.state is not JobState.RUNNING:
+                handle.cancel()
                 rs.events.append(f"scale-up blocked at {rs.replicas}")
                 break
             burst = len(self.scheduler.external_paths) > external_before
@@ -126,16 +146,16 @@ class Orchestrator:
             rs.events.append(
                 f"scaled to {rs.replicas}" + (" (burst)" if burst else ""))
             applied += 1
-        # scale down: cancel the newest replica jobs (external last in,
-        # first out — cloud cost drains before local capacity)
+        # scale down: cancel the newest replica handles (external last
+        # in, first out — cloud cost drains before local capacity)
         while rs.replicas > rs.desired:
-            jobs = self.queue.running_for(rs.jobid)
-            if not jobs:
+            handles = self.api.running(rs.jobid)
+            if not handles:
                 break
-            victim = jobs[-1]
+            victim = handles[-1]
             was_external = any(p in self.scheduler.external_paths
                                for p in victim.paths)
-            self.queue.cancel(victim.jobid)
+            victim.cancel()
             rs.replicas -= 1
             if was_external:
                 rs.external_replicas = max(rs.external_replicas - 1, 0)
@@ -144,24 +164,44 @@ class Orchestrator:
         return applied
 
     # ------------------------------------------------------------ #
+    def _drain_events(self) -> None:
+        """Replay the journal since the last cursor, collecting which
+        replica-set allocations lost replicas to PREEMPT (hierarchy
+        revokes and policy preemptions look identical here).  Events
+        for allocations this orchestrator doesn't manage are skipped,
+        so a shared queue's unrelated churn can't grow state here."""
+        mine = {rs.jobid for rs in self.replica_sets.values()}
+        events, self._cursor = self.api.events_since(self._cursor)
+        for ev in events:
+            if ev.type is EventType.PREEMPT:
+                alloc = ev.detail.get("alloc_id", ev.jobid)
+                if alloc in mine:
+                    self._revoked.setdefault(alloc, []).append(ev.jobid)
+
     def _observe_revocations(self, rs: ReplicaSet) -> None:
         """Reconcile the replica count with reality after the hierarchy
         revoked (part of) the replica set's allocation.  Requeued
-        PREEMPTED replicas are dropped — re-dispatching fresh jobs lets
-        the burst policy re-evaluate against the post-revoke state —
-        and the actual/external counters resync from the queue."""
-        requeued = [j for j in self.queue.pending
-                    if j.alloc_id == rs.jobid]
-        for job in requeued:
-            self.queue.cancel(job.jobid)
-        alive = self.queue.running_for(rs.jobid)
+        PREEMPTED replicas (found via event replay) are dropped —
+        re-dispatching fresh jobs lets the burst policy re-evaluate
+        against the post-revoke state — and the actual/external
+        counters resync from the live handles."""
+        self._drain_events()
+        requeued = []
+        for jobid in self._revoked.pop(rs.jobid, []):
+            info = self.api.job(jobid)
+            # drop only replicas still waiting in the queue — one that
+            # already restarted on its own is a live replica, not drift
+            if info and info["state"] == JobState.PREEMPTED.value:
+                self.api.cancel(jobid)
+                requeued.append(jobid)
+        alive = self.api.running(rs.jobid)
         if requeued or len(alive) != rs.replicas:
             rs.events.append(
                 f"revoked: {rs.replicas} -> {len(alive)} replicas")
         rs.replicas = len(alive)
         rs.external_replicas = sum(
-            1 for j in alive
-            if any(p in self.scheduler.external_paths for p in j.paths))
+            1 for h in alive
+            if any(p in self.scheduler.external_paths for p in h.paths))
 
     # ------------------------------------------------------------ #
     def autoscale(self, name: str, load: float,

@@ -15,6 +15,59 @@ import pytest
 ROOT = Path(__file__).resolve().parents[1]
 
 
+def test_shrink_keeps_queue_and_scheduler_accounting_in_agreement():
+    """Regression (control plane only, no jax bind): ``shrink`` used to
+    release chips directly against the scheduler without notifying any
+    queue accounting.  Ported onto the Instance facade, every grow and
+    shrink flows through the queue, so the queue's job record, the
+    scheduler allocation, and QueueStats utilization must agree after
+    each elasticity event."""
+    from repro.core import EventType, Instance
+    from repro.core.graph import build_tpu_fleet
+    from repro.runtime.elastic import ElasticRuntime
+
+    class ControlPlaneOnly(ElasticRuntime):
+        def bind(self, key=None):       # data plane stubbed out
+            pass
+
+    fleet = build_tpu_fleet(pods=1, racks_per_pod=1, nodes_per_rack=4,
+                            chips_per_node=4)
+    api = Instance(graph=fleet, name="top")
+    rt = ControlPlaneOnly.__new__(ControlPlaneOnly)
+    # constructor builds model configs we don't need; wire by hand
+    rt.api = api
+    rt.scheduler = api.scheduler
+    rt.handle = None
+    rt.jobid = "train-job"
+    rt.chip_type = "chip"
+    rt.model_axis = 1
+    rt.events = []
+
+    def agree():
+        job = api.queue.get(rt.jobid)
+        alloc = api.scheduler.allocations[rt.jobid]
+        assert sorted(job.paths) == sorted(alloc.paths)
+        busy = sum(len(j.paths) for j in api.queue.running)
+        assert busy == len(job.paths)
+
+    assert rt.allocate(4)
+    agree()
+    assert rt.grow(4)
+    assert rt.chips_allocated() == 8
+    agree()
+    assert rt.shrink(2)
+    assert rt.chips_allocated() == 6
+    agree()
+    # shrink below the model axis floor is refused, accounting intact
+    assert not rt.shrink(6)
+    assert rt.chips_allocated() == 6
+    agree()
+    # events flowed back through the journal: grow and shrink are
+    # observable, first-class operations
+    kinds = [e.type for e in api.events.for_job(rt.jobid)]
+    assert EventType.GROW in kinds and EventType.SHRINK in kinds
+
+
 def _run(code: str, devices: int = 8, timeout: int = 600) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"

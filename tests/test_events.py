@@ -1,0 +1,185 @@
+"""Event-semantics tests: total order per job, cursor replay == live
+subscription, the PREEMPT requeue sequence, and events riding
+``SocketTransport`` unchanged."""
+import pytest
+
+from repro.core import (EventLog, EventType, Instance, JobEvent, JobState,
+                        Jobspec, MultiTenantTree, PreemptivePriority,
+                        RemoteInstance, SimClock, TenantSpec, build_cluster)
+from repro.core.rpc import SocketTransport
+
+NODE = Jobspec.hpc(nodes=1, sockets=2, cores=32)
+SOCKET8 = Jobspec.hpc(nodes=0, sockets=1, cores=8)
+
+
+def _instance(nodes=2, **kw):
+    return Instance(graph=build_cluster(nodes=nodes), name="ev",
+                    clock=SimClock(), **kw)
+
+
+# ---------------------------------------------------------------------- #
+# the log itself
+# ---------------------------------------------------------------------- #
+def test_eventlog_cursor_replay_and_bounds():
+    log = EventLog(maxlen=8)
+    for i in range(20):
+        log.emit(EventType.SUBMIT, f"j{i}", t=float(i))
+    events, cursor = log.since(0)
+    assert len(events) == 8                 # bounded retention
+    assert [e.jobid for e in events] == [f"j{i}" for i in range(12, 20)]
+    assert cursor == 20
+    # incremental replay from a live cursor
+    log.emit(EventType.FREE, "j20", t=20.0)
+    more, cursor2 = log.since(cursor)
+    assert [e.jobid for e in more] == ["j20"] and cursor2 == 21
+    tail, _ = log.since(cursor2)
+    assert tail == []
+
+
+def test_event_roundtrips_through_dict():
+    ev = JobEvent(seq=3, t=1.5, type=EventType.GROW, jobid="a",
+                  detail={"via": "parent", "size": 10})
+    assert JobEvent.from_dict(ev.to_dict()) == ev
+
+
+def test_live_subscription_equals_cursor_replay():
+    inst = _instance()
+    live = []
+    unsubscribe = inst.subscribe(live.append)
+    a = inst.submit(NODE, walltime=5.0)
+    b = inst.submit(NODE, walltime=7.0)
+    inst.step()
+    inst.drain()
+    replayed, _ = inst.events_since(0)
+    assert replayed == live
+    assert a.state is JobState.COMPLETED
+    assert b.state is JobState.COMPLETED
+    # unsubscribe stops the live feed
+    unsubscribe()
+    inst.submit(NODE, walltime=1.0)
+    assert len(live) < len(inst.events_since(0)[0])
+
+
+# ---------------------------------------------------------------------- #
+# per-job sequences
+# ---------------------------------------------------------------------- #
+def test_total_order_per_job_lifecycle():
+    inst = _instance(nodes=1)
+    h = inst.submit(NODE, walltime=5.0)
+    inst.step()
+    inst.drain()
+    kinds = [e.type for e in h.events()]
+    assert kinds == [EventType.SUBMIT, EventType.ALLOC, EventType.START,
+                     EventType.RELEASE, EventType.FREE]
+    # seq is globally monotonic, hence totally ordered per job
+    seqs = [e.seq for e in h.events()]
+    assert seqs == sorted(seqs)
+
+
+def test_preempt_requeue_emits_the_right_sequence():
+    """Intra-queue preemption: the victim's journal reads
+    RELEASE -> PREEMPT, then a fresh ALLOC/START when it restarts."""
+    inst = _instance(nodes=1, policy=PreemptivePriority())
+    low = inst.submit(NODE, walltime=50.0, priority=0, preemptible=True)
+    inst.step()
+    hi = inst.submit(NODE, walltime=10.0, priority=5)
+    inst.step()
+    assert hi.state is JobState.RUNNING
+    assert low.state is JobState.PREEMPTED
+    inst.drain()
+    assert low.state is JobState.COMPLETED
+    kinds = [e.type.value for e in low.events()]
+    assert kinds == ["submit", "alloc", "start",
+                     "release", "preempt",
+                     "alloc", "start", "release", "free"], kinds
+
+
+def test_cross_tenant_revoke_emits_revoke_then_preempt():
+    """A hierarchy revoke lands in the victim tenant's journal as
+    RELEASE -> REVOKE -> PREEMPT (the scheduler releases, the engine
+    revokes, the queue requeues) before the victim restarts."""
+    root_g = build_cluster(nodes=2)
+    a_g = root_g.extract([p for p in root_g.paths() if "node0" in p])
+    b_g = root_g.extract([p for p in root_g.paths() if "node1" in p])
+    mt = MultiTenantTree(root_g, [
+        TenantSpec("A", a_g, policy=PreemptivePriority()),
+        TenantSpec("B", b_g)])
+    try:
+        b1 = mt.instance("B").submit(NODE, walltime=100.0,
+                                     preemptible=True)
+        b2 = mt.instance("B").submit(NODE, walltime=100.0,
+                                     preemptible=True)
+        mt.step()
+        mt.instance("A").submit(NODE, walltime=10.0, priority=9)
+        mt.step()
+        victim = b1 if b1.state is JobState.PREEMPTED else b2
+        kinds = [e.type.value for e in victim.events()]
+        i = kinds.index("release")
+        assert kinds[i:i + 3] == ["release", "revoke", "preempt"], kinds
+        mt.drain()
+        assert victim.state is JobState.COMPLETED
+    finally:
+        mt.close()
+
+
+def test_grow_and_shrink_are_observable_operations():
+    inst = _instance(nodes=2, allow_grow=False)
+    h = inst.submit(SOCKET8, walltime=None)
+    inst.step()
+    assert h.state is JobState.RUNNING
+    assert h.grow(SOCKET8)
+    n = len(h.paths)
+    assert h.shrink(count=max(n // 2, 1))
+    kinds = [e.type.value for e in h.events()]
+    assert "grow" in kinds and "shrink" in kinds
+    assert kinds.index("grow") < kinds.index("shrink")
+    # shrink detail carries the released path count
+    shrink_ev = next(e for e in h.events()
+                     if e.type is EventType.SHRINK)
+    assert shrink_ev.detail["n_paths"] == max(n // 2, 1)
+    # refused operations surface as EXCEPTION, not silence
+    assert not h.shrink(count=len(h.paths))
+    assert any(e.type is EventType.EXCEPTION for e in h.events())
+
+
+# ---------------------------------------------------------------------- #
+# events over SocketTransport
+# ---------------------------------------------------------------------- #
+def _drive(api) -> list:
+    """One scripted scenario driven through any Instance-like surface;
+    returns the (type, jobid) event sequence it produced."""
+    a = api.submit(NODE, walltime=5.0, jobid="job-a")
+    b = api.submit(NODE, walltime=8.0, jobid="job-b")
+    api.step()
+    api.advance(20.0)
+    events, _ = api.events_since(0)
+    return [(e.type.value, e.jobid) for e in events]
+
+
+def test_remote_tree_observes_same_event_sequence_as_inproc():
+    """A remote client drives a tree it doesn't own over
+    ``SocketTransport`` and reads back, via cursor replay, exactly the
+    sequence an in-proc consumer sees for the same scenario."""
+    local = _instance(nodes=2)
+    inproc_seq = _drive(local)
+
+    served = _instance(nodes=2)
+    remote = RemoteInstance(SocketTransport(served.serve()))
+    try:
+        remote_seq = _drive(remote)
+        assert remote_seq == inproc_seq
+        # cursor semantics hold remotely too: replay is incremental
+        events, cursor = remote.events_since(0)
+        assert [(e.type.value, e.jobid) for e in events] == remote_seq
+        more, cursor2 = remote.events_since(cursor)
+        assert more == [] and cursor2 == cursor
+        # and the remote handle verbs work against the served queue
+        h = remote.submit(NODE, walltime=3.0, jobid="job-c")
+        remote.step()
+        assert h.wait() is JobState.COMPLETED
+        assert [e.type.value for e in h.events()] == \
+            ["submit", "alloc", "start", "release", "free"]
+    finally:
+        remote.close()
+        served.close()
+        local.close()
