@@ -36,7 +36,6 @@ exposed for consumers that drive time explicitly.
 """
 from __future__ import annotations
 
-import threading
 import time as _time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -165,14 +164,12 @@ class Instance:
         self.events: EventLog = self.queue.eventlog
         # the served surface runs in RPCServer session threads while
         # the owner drives the same queue from its own thread; the
-        # JobQueue itself is single-threaded by design, so every
-        # queue-touching verb serializes here (the scheduler below has
-        # its own finer-grained lock for the MG/release paths).  Two
-        # Instances wrapping one queue must share one lock.
-        self._lock = getattr(self.queue, "_api_lock", None)
-        if self._lock is None:
-            self._lock = threading.RLock()
-            self.queue._api_lock = self._lock
+        # JobQueue owns the lock and its public verbs (and the revoke
+        # listener) take it themselves, so Instance only re-enters it
+        # here to make composite operations (submit+step in wait,
+        # list+wrap in running/pending) atomic.  Two Instances
+        # wrapping one queue therefore share one lock.
+        self._lock = self.queue._api_lock
         self._register_methods()
 
     # ------------------------------------------------------------------ #
@@ -188,24 +185,20 @@ class Instance:
         the controller path: try to start *this* job immediately,
         regardless of the queue's head-of-line state."""
         fn = self.queue.dispatch if dispatch else self.queue.submit
-        with self._lock:
-            job = fn(jobspec, walltime=walltime, priority=priority,
-                     alloc_id=alloc_id, jobid=jobid, grow=grow,
-                     preemptible=preemptible)
+        job = fn(jobspec, walltime=walltime, priority=priority,
+                 alloc_id=alloc_id, jobid=jobid, grow=grow,
+                 preemptible=preemptible)
         return JobHandle(self, job)
 
     def cancel(self, jobid: str) -> bool:
-        with self._lock:
-            return self.queue.cancel(jobid)
+        return self.queue.cancel(jobid)
 
     def grow(self, jobid: str, jobspec: Jobspec) -> bool:
-        with self._lock:
-            return self.queue.grow_job(jobid, jobspec)
+        return self.queue.grow_job(jobid, jobspec)
 
     def shrink(self, jobid: str, paths: Optional[List[str]] = None,
                count: Optional[int] = None) -> bool:
-        with self._lock:
-            return self.queue.shrink_job(jobid, paths=paths, count=count)
+        return self.queue.shrink_job(jobid, paths=paths, count=count)
 
     def wait(self, jobid: str, timeout: Optional[float] = None
              ) -> Optional[JobState]:
@@ -266,6 +259,13 @@ class Instance:
             return [JobHandle(self, j) for j in self.queue.running
                     if alloc_id is None or j.alloc_id == alloc_id]
 
+    def pending(self, alloc_id: Optional[str] = None) -> List[JobHandle]:
+        """Handles for queued (PENDING / PREEMPTED) jobs, optionally
+        restricted to one scheduler allocation, in policy order."""
+        with self._lock:
+            return [JobHandle(self, j) for j in self.queue.pending
+                    if alloc_id is None or j.alloc_id == alloc_id]
+
     def events_since(self, cursor: int = 0
                      ) -> Tuple[List[JobEvent], int]:
         return self.events.since(cursor)
@@ -278,21 +278,17 @@ class Instance:
         return self.scheduler.usage()
 
     def stats(self) -> QueueStats:
-        with self._lock:
-            return self.queue.stats()
+        return self.queue.stats()
 
     # -- time driving -------------------------------------------------- #
     def step(self) -> int:
-        with self._lock:
-            return self.queue.step()
+        return self.queue.step()
 
     def advance(self, dt: float) -> int:
-        with self._lock:
-            return self.queue.advance(dt)
+        return self.queue.advance(dt)
 
     def drain(self) -> List[Job]:
-        with self._lock:
-            return self.queue.drain()
+        return self.queue.drain()
 
     # -- serving ------------------------------------------------------- #
     def serve(self) -> Tuple[str, int]:

@@ -36,10 +36,11 @@ Emission map (who appends what):
 """
 from __future__ import annotations
 
+import collections
 import enum
 import threading
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 
 class EventType(enum.Enum):
@@ -93,11 +94,26 @@ class EventLog:
         self._events: List[JobEvent] = []
         self._base = 0                  # seq of _events[0]
         self._next = 0                  # next seq to assign
-        # re-entrant: subscribers run under the lock (so live delivery
-        # order always equals seq/replay order even with concurrent
-        # emitters) and may themselves emit or subscribe
         self._lock = threading.RLock()
-        self._subscribers: List[Callable[[JobEvent], None]] = []
+        # (callback, join cursor): a subscriber only receives events
+        # with seq >= its join cursor, so a since()-then-subscribe
+        # handoff never sees an event both via replay and live (a
+        # concurrent emitter's parked events would otherwise be
+        # delivered to subscribers registered after the emit)
+        self._subscribers: List[Tuple[Callable[[JobEvent], None],
+                                      int]] = []
+        # live delivery runs OUTSIDE the lock: holding it across
+        # arbitrary subscriber code invites lock-order inversions (a
+        # subscriber calling back into an Instance verb while an
+        # Instance-verb thread emits) and lets one bad/slow subscriber
+        # wedge every emitter.  Appends park the event here and exactly
+        # one thread at a time drains, so delivery order still equals
+        # seq/replay order.  Which thread runs a callback is
+        # UNSPECIFIED: any emitter may end up draining another
+        # emitter's parked events, so subscribers must not assume the
+        # emitting operation's locks are held.
+        self._delivery: Deque[JobEvent] = collections.deque()
+        self._delivering = False
 
     # ------------------------------------------------------------------ #
     def emit(self, type: EventType, jobid: str,
@@ -106,22 +122,62 @@ class EventLog:
         0.0) and push it to live subscribers."""
         if t is None:
             t = self.clock.now() if self.clock is not None else 0.0
-        with self._lock:
-            ev = JobEvent(seq=self._next, t=t, type=type, jobid=jobid,
-                          detail=detail)
-            self._next += 1
-            self._events.append(ev)
-            if len(self._events) > self.maxlen:
-                drop = len(self._events) - self.maxlen
-                del self._events[:drop]
-                self._base += drop
-            # deliver under the lock: a concurrent emitter must not be
-            # able to reorder live delivery relative to seq order (the
-            # replay==live guarantee); the RLock keeps re-entrant
-            # emits from subscribers safe
-            for cb in list(self._subscribers):
-                cb(ev)
+        claimed = False
+        try:
+            with self._lock:
+                ev = JobEvent(seq=self._next, t=t, type=type,
+                              jobid=jobid, detail=detail)
+                self._next += 1
+                self._events.append(ev)
+                if len(self._events) > self.maxlen:
+                    drop = len(self._events) - self.maxlen
+                    del self._events[:drop]
+                    self._base += drop
+                self._delivery.append(ev)
+                if not self._delivering:
+                    # this frame becomes the drainer; any frame that
+                    # sees the flag set (an outer emit on this thread,
+                    # a concurrent emitter) just parks its event and
+                    # trusts the drainer to deliver it in seq order
+                    self._delivering = True
+                    claimed = True
+            if claimed:
+                self._drain_delivery()
+        except BaseException:
+            # a KeyboardInterrupt/SystemExit anywhere between claiming
+            # the flag and the drain finishing must not leave it stuck
+            # (delivery would silently stop forever); _drain_delivery
+            # itself only resets on normal return, so this is the one
+            # reset point for the abnormal path and cannot clear a flag
+            # some other thread has since claimed
+            if claimed:
+                with self._lock:
+                    self._delivering = False
+            raise
         return ev
+
+    def _drain_delivery(self) -> None:
+        """Deliver parked events to subscribers, one event at a time,
+        without holding the lock across callbacks.  Exactly one thread
+        drains at a time (``_delivering``), so live delivery order
+        equals seq order; a subscriber that raises is skipped so it
+        cannot abort the emitting scheduler/queue operation.  On
+        BaseException the flag is left set — the claiming ``emit``
+        frame resets it."""
+        while True:
+            with self._lock:
+                if not self._delivery:
+                    self._delivering = False
+                    return
+                ev = self._delivery.popleft()
+                subs = list(self._subscribers)
+            for cb, joined in subs:
+                if ev.seq < joined:
+                    continue    # predates this subscriber
+                try:
+                    cb(ev)
+                except Exception:
+                    pass
 
     # ------------------------------------------------------------------ #
     def since(self, cursor: int = 0) -> Tuple[List[JobEvent], int]:
@@ -138,20 +194,29 @@ class EventLog:
 
     def subscribe(self, cb: Callable[[JobEvent], None]
                   ) -> Callable[[], None]:
-        """Register a live callback; returns an unsubscribe function."""
+        """Register a live callback for events emitted from now on
+        (events already emitted — even if still queued for delivery —
+        are the replay side's job); returns an unsubscribe function."""
         with self._lock:
-            self._subscribers.append(cb)
+            entry = (cb, self._next)
+            self._subscribers.append(entry)
 
         def unsubscribe() -> None:
             with self._lock:
-                if cb in self._subscribers:
-                    self._subscribers.remove(cb)
+                if entry in self._subscribers:
+                    self._subscribers.remove(entry)
         return unsubscribe
 
     # ------------------------------------------------------------------ #
     def __len__(self) -> int:
         with self._lock:
             return self._next
+
+    def __bool__(self) -> bool:
+        # a log is an identity, not a container: an EMPTY log must not
+        # be falsy (``eventlog or EventLog()`` would silently replace a
+        # caller-supplied log before its first emit)
+        return True
 
     @property
     def cursor(self) -> int:

@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import enum
 import itertools
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -200,10 +201,25 @@ class JobQueue:
         # typed event surface (core/events.py): the queue, the engine,
         # and the scheduler all emit into one log per queue, so every
         # consumer observes the same total order
-        self.eventlog = eventlog or EventLog(clock=self.clock)
+        self.eventlog = eventlog if eventlog is not None \
+            else EventLog(clock=self.clock)
         if scheduler.eventlog is None:
             scheduler.eventlog = self.eventlog
         self.n_preemptions = 0
+        # one lock serializes EVERY mutation of the queue's lists: the
+        # public verbs below take it themselves, so every driver —
+        # Instance verbs on RPC session threads, MultiTenantTree's
+        # joint step/advance, direct callers — is covered, as is the
+        # hierarchy's revoke listener (which fires on whatever thread
+        # ran the preemptive grow).  Re-entrant, so the in-proc
+        # escalation path (step under the lock -> engine revoke ->
+        # _on_revoked on the same thread) cannot self-deadlock.
+        # Ordering caveat: a cross-tenant revoke acquires the VICTIM
+        # queue's lock while the grower's is held, so two mutually
+        # preemptive tenants driven from two threads could deadlock
+        # AB-BA; drive mutually preemptive trees from one thread (the
+        # MultiTenantTree pattern) or make preemption one-directional.
+        self._api_lock = threading.RLock()
         self._seq = itertools.count()
         self._by_id: Dict[str, Job] = {}
         # scheduling memo: a blocked head is not re-escalated through
@@ -236,21 +252,23 @@ class JobQueue:
         ``preemptible`` marks the job's allocation as revocable by
         higher-priority work (cross-tenant revokes and preemptive
         policies only ever displace preemptible jobs)."""
-        self._accrue()
-        seq = next(self._seq)
-        jobid = jobid or f"q{seq}-{self.scheduler.name}"
-        job = Job(jobid=jobid, jobspec=jobspec,
-                  alloc_id=alloc_id or jobid, walltime=walltime,
-                  priority=priority, submit_time=self.clock.now(),
-                  grow=grow, seq=seq, preemptible=preemptible)
-        self._by_id[jobid] = job
-        self._version += 1
-        self.pending.append(job)
-        self.pending.sort(key=self.policy.sort_key)
-        self._log(f"t={job.submit_time:.3f} submit {jobid}")
-        self.eventlog.emit(EventType.SUBMIT, jobid, alloc_id=job.alloc_id,
-                           priority=priority, walltime=walltime)
-        return job
+        with self._api_lock:
+            self._accrue()
+            seq = next(self._seq)
+            jobid = jobid or f"q{seq}-{self.scheduler.name}"
+            job = Job(jobid=jobid, jobspec=jobspec,
+                      alloc_id=alloc_id or jobid, walltime=walltime,
+                      priority=priority, submit_time=self.clock.now(),
+                      grow=grow, seq=seq, preemptible=preemptible)
+            self._by_id[jobid] = job
+            self._version += 1
+            self.pending.append(job)
+            self.pending.sort(key=self.policy.sort_key)
+            self._log(f"t={job.submit_time:.3f} submit {jobid}")
+            self.eventlog.emit(EventType.SUBMIT, jobid,
+                               alloc_id=job.alloc_id,
+                               priority=priority, walltime=walltime)
+            return job
 
     def dispatch(self, jobspec: Jobspec, walltime: Optional[float] = None,
                  priority: int = 0, alloc_id: Optional[str] = None,
@@ -261,42 +279,47 @@ class JobQueue:
         regardless of the queue's head-of-line state (a reconciler like
         the orchestrator must not be wedged behind an unrelated blocked
         batch job).  The job stays PENDING if it cannot start."""
-        job = self.submit(jobspec, walltime=walltime, priority=priority,
-                          alloc_id=alloc_id, jobid=jobid, grow=grow,
-                          preemptible=preemptible)
-        self._complete_due()
-        if self._try_start(job):
-            self._activate(job)
-        return job
+        with self._api_lock:
+            job = self.submit(jobspec, walltime=walltime,
+                              priority=priority, alloc_id=alloc_id,
+                              jobid=jobid, grow=grow,
+                              preemptible=preemptible)
+            self._complete_due()
+            if self._try_start(job):
+                self._activate(job)
+            return job
 
     def get(self, jobid: str) -> Optional[Job]:
         return self._by_id.get(jobid)
 
     def cancel(self, jobid: str) -> bool:
-        job = self._by_id.get(jobid)
-        if job is None:
+        with self._api_lock:
+            job = self._by_id.get(jobid)
+            if job is None:
+                return False
+            if job.state in (JobState.PENDING, JobState.PREEMPTED):
+                # a job that never ran leaves no trace: controllers
+                # retry blocked submissions every reconcile tick, and
+                # retaining each attempt would grow _by_id (and stats)
+                # without bound
+                self.pending.remove(job)
+                self._by_id.pop(jobid, None)
+                self._version += 1
+                job.state = JobState.CANCELLED
+                self.eventlog.emit(EventType.FREE, jobid,
+                                   state=JobState.CANCELLED.value,
+                                   alloc_id=job.alloc_id)
+                return True
+            if job.state is JobState.RUNNING:
+                self._accrue()
+                self._finish(job, JobState.CANCELLED)
+                return True
             return False
-        if job.state in (JobState.PENDING, JobState.PREEMPTED):
-            # a job that never ran leaves no trace: controllers retry
-            # blocked submissions every reconcile tick, and retaining
-            # each attempt would grow _by_id (and stats) without bound
-            self.pending.remove(job)
-            self._by_id.pop(jobid, None)
-            self._version += 1
-            job.state = JobState.CANCELLED
-            self.eventlog.emit(EventType.FREE, jobid,
-                               state=JobState.CANCELLED.value,
-                               alloc_id=job.alloc_id)
-            return True
-        if job.state is JobState.RUNNING:
-            self._accrue()
-            self._finish(job, JobState.CANCELLED)
-            return True
-        return False
 
     def running_for(self, alloc_id: str) -> List[Job]:
         """RUNNING jobs bound to one scheduler allocation, oldest first."""
-        return [j for j in self.running if j.alloc_id == alloc_id]
+        with self._api_lock:
+            return [j for j in self.running if j.alloc_id == alloc_id]
 
     # ------------------------------------------------------------------ #
     # lifecycle engine
@@ -304,49 +327,52 @@ class JobQueue:
     def step(self) -> int:
         """Complete due jobs, then schedule from the queue.  Returns the
         number of jobs started."""
-        self._accrue()
-        self._complete_due()
-        return self._schedule()
+        with self._api_lock:
+            self._accrue()
+            self._complete_due()
+            return self._schedule()
 
     def advance(self, dt: float) -> int:
         """Advance a SimClock by ``dt``, stopping at every completion
         event on the way so releases and starts interleave in order."""
         clock = self.clock
         assert isinstance(clock, SimClock), "advance() needs a SimClock"
-        target = clock.now() + dt
-        started = 0
-        while True:
-            due = [j.end_time for j in self.running
-                   if j.end_time is not None and j.end_time <= target]
-            if not due:
-                break
+        with self._api_lock:
+            target = clock.now() + dt
+            started = 0
+            while True:
+                due = [j.end_time for j in self.running
+                       if j.end_time is not None and j.end_time <= target]
+                if not due:
+                    break
+                self._accrue()
+                clock.set(min(due))
+                started += self.step()
             self._accrue()
-            clock.set(min(due))
+            clock.set(target)
             started += self.step()
-        self._accrue()
-        clock.set(target)
-        started += self.step()
-        return started
+            return started
 
     def drain(self, max_events: int = 100_000) -> List[Job]:
         """Run a SimClock queue until nothing is running and nothing
         more can start.  Returns the completed jobs."""
         clock = self.clock
         assert isinstance(clock, SimClock), "drain() needs a SimClock"
-        for _ in range(max_events):
-            self.step()
-            nxt = [j.end_time for j in self.running
-                   if j.end_time is not None]
-            if nxt:
-                self._accrue()
-                clock.set(max(min(nxt), clock.now()))
-                continue
-            if not self.pending:
-                break
-            # pending but nothing running and nothing startable: stuck
-            if self.step() == 0:
-                break
-        return list(self.completed)
+        with self._api_lock:
+            for _ in range(max_events):
+                self.step()
+                nxt = [j.end_time for j in self.running
+                       if j.end_time is not None]
+                if nxt:
+                    self._accrue()
+                    clock.set(max(min(nxt), clock.now()))
+                    continue
+                if not self.pending:
+                    break
+                # pending but nothing running, nothing startable: stuck
+                if self.step() == 0:
+                    break
+            return list(self.completed)
 
     # -- internals ----------------------------------------------------- #
     def _log(self, line: str) -> None:
@@ -451,10 +477,11 @@ class JobQueue:
 
     def start_if_fits(self, job: Job) -> bool:
         """Policy entry point: try to start one pending job now."""
-        if self._try_start(job):
-            self._activate(job)
-            return True
-        return False
+        with self._api_lock:
+            if self._try_start(job):
+                self._activate(job)
+                return True
+            return False
 
     # ------------------------------------------------------------------ #
     # malleable operations: grow/shrink a RUNNING job's allocation
@@ -464,26 +491,27 @@ class JobQueue:
         through the hierarchy; the engine emits the GROW event).  The
         grown vertices join the job's ``paths``, so utilization and
         release accounting stay exact."""
-        job = self._by_id.get(jobid)
-        if job is None or job.state is not JobState.RUNNING:
-            self.eventlog.emit(EventType.EXCEPTION, jobid, op="grow",
-                               reason="job not running")
-            return False
-        self._accrue()
-        res = self.scheduler.match_grow(jobspec, job.alloc_id,
-                                        priority=job.priority,
-                                        preempt=self.policy.preemptive)
-        if not res:
-            return False
-        job.paths.extend(res.paths())
-        if res.victims:
-            self._log(f"t={self.clock.now():.3f} {job.jobid} "
-                      f"revoked {','.join(res.victims)}")
-        self._sync_alloc_meta(job.alloc_id)
-        self._version += 1
-        self._log(f"t={self.clock.now():.3f} grow {job.jobid} "
-                  f"+{len(res.new_paths)} via={res.via}")
-        return True
+        with self._api_lock:
+            job = self._by_id.get(jobid)
+            if job is None or job.state is not JobState.RUNNING:
+                self.eventlog.emit(EventType.EXCEPTION, jobid, op="grow",
+                                   reason="job not running")
+                return False
+            self._accrue()
+            res = self.scheduler.match_grow(jobspec, job.alloc_id,
+                                            priority=job.priority,
+                                            preempt=self.policy.preemptive)
+            if not res:
+                return False
+            job.paths.extend(res.paths())
+            if res.victims:
+                self._log(f"t={self.clock.now():.3f} {job.jobid} "
+                          f"revoked {','.join(res.victims)}")
+            self._sync_alloc_meta(job.alloc_id)
+            self._version += 1
+            self._log(f"t={self.clock.now():.3f} grow {job.jobid} "
+                      f"+{len(res.new_paths)} via={res.via}")
+            return True
 
     def shrink_job(self, jobid: str, paths: Optional[List[str]] = None,
                    count: Optional[int] = None) -> bool:
@@ -494,30 +522,43 @@ class JobQueue:
         The queue's accounting (``paths``, utilization integrals, the
         scheduler allocation) stays consistent; shrinking a job to
         nothing is refused (cancel it instead)."""
-        job = self._by_id.get(jobid)
-        if job is None or job.state is not JobState.RUNNING:
-            self.eventlog.emit(EventType.EXCEPTION, jobid, op="shrink",
-                               reason="job not running")
-            return False
-        if paths is None:
-            paths = job.paths[-count:] if count else []
-        doomed = [p for p in paths if p in job.paths]
-        if not doomed or len(doomed) >= len(job.paths):
-            self.eventlog.emit(EventType.EXCEPTION, jobid, op="shrink",
-                               reason="would shrink to nothing"
-                               if doomed else "no owned paths given")
-            return False
-        self._accrue()
-        self.scheduler.release(job.alloc_id, doomed)
-        gone = set(doomed)
-        job.paths = [p for p in job.paths if p not in gone]
-        self._sync_alloc_meta(job.alloc_id)
-        self._version += 1
-        self._log(f"t={self.clock.now():.3f} shrink {job.jobid} "
-                  f"-{len(doomed)}")
-        self.eventlog.emit(EventType.SHRINK, job.jobid,
-                           n_paths=len(doomed), alloc_id=job.alloc_id)
-        return True
+        with self._api_lock:
+            job = self._by_id.get(jobid)
+            if job is None or job.state is not JobState.RUNNING:
+                self.eventlog.emit(EventType.EXCEPTION, jobid,
+                                   op="shrink",
+                                   reason="job not running")
+                return False
+            if paths is None:
+                # validate before slicing: a negative count would slice
+                # from the FRONT (paths[-count:] keeps the tail),
+                # silently releasing most of the allocation — and this
+                # surface is remotely reachable via the RPC ``shrink``
+                # verb
+                if count is None or count <= 0:
+                    self.eventlog.emit(EventType.EXCEPTION, jobid,
+                                       op="shrink",
+                                       reason="invalid shrink count")
+                    return False
+                paths = job.paths[-count:]
+            doomed = [p for p in paths if p in job.paths]
+            if not doomed or len(doomed) >= len(job.paths):
+                self.eventlog.emit(EventType.EXCEPTION, jobid,
+                                   op="shrink",
+                                   reason="would shrink to nothing"
+                                   if doomed else "no owned paths given")
+                return False
+            self._accrue()
+            self.scheduler.release(job.alloc_id, doomed)
+            gone = set(doomed)
+            job.paths = [p for p in job.paths if p not in gone]
+            self._sync_alloc_meta(job.alloc_id)
+            self._version += 1
+            self._log(f"t={self.clock.now():.3f} shrink {job.jobid} "
+                      f"-{len(doomed)}")
+            self.eventlog.emit(EventType.SHRINK, job.jobid,
+                               n_paths=len(doomed), alloc_id=job.alloc_id)
+            return True
 
     def _sync_alloc_meta(self, alloc_id: str) -> None:
         """Propagate job priorities to the scheduler allocation so the
@@ -538,19 +579,25 @@ class JobQueue:
     def preempt(self, job: Job) -> None:
         """Evict one RUNNING job of this queue: release its resources
         and requeue it (PREEMPTED, scheduled like PENDING)."""
-        if job not in self.running:
-            return
-        self._accrue()
-        self.scheduler.release(job.alloc_id, job.paths)
-        self._requeue(job)
+        with self._api_lock:
+            if job not in self.running:
+                return
+            self._accrue()
+            self.scheduler.release(job.alloc_id, job.paths)
+            self._requeue(job)
 
     def _on_revoked(self, alloc_id: str, paths: List[str]) -> None:
         """revoke_listener: the hierarchy already released the
         allocation out from under us — requeue every job bound to it
-        (resources are gone; do NOT release again)."""
-        for job in [j for j in self.running if j.alloc_id == alloc_id]:
-            self._accrue()
-            self._requeue(job)
+        (resources are gone; do NOT release again).  Runs on whatever
+        thread performed the preemptive grow (an RPC session thread
+        when a sibling grew through the parent), so it must take the
+        queue's API lock before touching running/pending."""
+        with self._api_lock:
+            for job in [j for j in self.running
+                        if j.alloc_id == alloc_id]:
+                self._accrue()
+                self._requeue(job)
 
     def _requeue(self, job: Job) -> None:
         now = self.clock.now()
@@ -577,7 +624,8 @@ class JobQueue:
         """Force the next step() to re-attempt scheduling even though
         the queue saw no event — call after mutating scheduler state or
         a pending Job from outside the queue's own API."""
-        self._version += 1
+        with self._api_lock:
+            self._version += 1
 
     def _schedule(self) -> int:
         # nothing changed since the last full pass ended blocked: a
@@ -611,31 +659,34 @@ class JobQueue:
     # reporting
     # ------------------------------------------------------------------ #
     def stats(self) -> QueueStats:
-        self._accrue()
-        waits = sorted(j.wait_time for j in self.completed + self.running
-                       if j.wait_time is not None)
-        done = [j for j in self.completed
-                if j.state is JobState.COMPLETED]
-        util = (self._busy_integral / self._cap_integral
-                if self._cap_integral > 0 else 0.0)
-        displaced = [j for j in self.completed + self.running + self.pending
-                     if j.preemptions > 0]
-        n_events = sum(j.preemptions for j in displaced)
-        rq_wait = sum(j.requeue_wait for j in displaced)
-        return QueueStats(
-            submitted=len(self._by_id),
-            started=len(waits),
-            completed=len(done),
-            pending=len(self.pending),
-            mean_wait=sum(waits) / len(waits) if waits else 0.0,
-            p50_wait=waits[len(waits) // 2] if waits else 0.0,
-            max_wait=waits[-1] if waits else 0.0,
-            utilization=util,
-            makespan=self.clock.now(),
-            preemptions=self.n_preemptions,
-            preempted_jobs=len(displaced),
-            mean_requeue_wait=rq_wait / n_events if n_events else 0.0,
-        )
+        with self._api_lock:
+            self._accrue()
+            waits = sorted(j.wait_time
+                           for j in self.completed + self.running
+                           if j.wait_time is not None)
+            done = [j for j in self.completed
+                    if j.state is JobState.COMPLETED]
+            util = (self._busy_integral / self._cap_integral
+                    if self._cap_integral > 0 else 0.0)
+            displaced = [j for j in
+                         self.completed + self.running + self.pending
+                         if j.preemptions > 0]
+            n_events = sum(j.preemptions for j in displaced)
+            rq_wait = sum(j.requeue_wait for j in displaced)
+            return QueueStats(
+                submitted=len(self._by_id),
+                started=len(waits),
+                completed=len(done),
+                pending=len(self.pending),
+                mean_wait=sum(waits) / len(waits) if waits else 0.0,
+                p50_wait=waits[len(waits) // 2] if waits else 0.0,
+                max_wait=waits[-1] if waits else 0.0,
+                utilization=util,
+                makespan=self.clock.now(),
+                preemptions=self.n_preemptions,
+                preempted_jobs=len(displaced),
+                mean_requeue_wait=rq_wait / n_events if n_events else 0.0,
+            )
 
 
 def _req_type_counts(jobspec: Jobspec) -> Dict[str, int]:

@@ -169,14 +169,35 @@ class Orchestrator:
         replica-set allocations lost replicas to PREEMPT (hierarchy
         revokes and policy preemptions look identical here).  Events
         for allocations this orchestrator doesn't manage are skipped,
-        so a shared queue's unrelated churn can't grow state here."""
+        so a shared queue's unrelated churn can't grow state here.
+
+        Two safety valves: records for replica sets that were removed
+        are pruned (they would otherwise accumulate forever), and if
+        the bounded journal dropped events between our cursor and its
+        retained window (reconcile fell > maxlen events behind), the
+        replay can no longer be trusted to contain every PREEMPT — so
+        fall back to a full state resync: any of our replicas still
+        sitting requeued in the pending queue is treated as revoked."""
         mine = {rs.jobid for rs in self.replica_sets.values()}
-        events, self._cursor = self.api.events_since(self._cursor)
+        for alloc in [a for a in self._revoked if a not in mine]:
+            del self._revoked[alloc]
+        cursor = self._cursor
+        events, self._cursor = self.api.events_since(cursor)
+        if events and events[0].seq > cursor:
+            for alloc in mine:
+                for h in self.api.pending(alloc):
+                    if h.state is not JobState.PREEMPTED:
+                        continue
+                    seen = self._revoked.setdefault(alloc, [])
+                    if h.jobid not in seen:
+                        seen.append(h.jobid)
         for ev in events:
             if ev.type is EventType.PREEMPT:
                 alloc = ev.detail.get("alloc_id", ev.jobid)
                 if alloc in mine:
-                    self._revoked.setdefault(alloc, []).append(ev.jobid)
+                    seen = self._revoked.setdefault(alloc, [])
+                    if ev.jobid not in seen:
+                        seen.append(ev.jobid)
 
     def _observe_revocations(self, rs: ReplicaSet) -> None:
         """Reconcile the replica count with reality after the hierarchy

@@ -291,3 +291,83 @@ def test_concurrent_release_and_grow_do_not_corrupt():
             assert inst.graph.validate_tree(), inst.name
     finally:
         h.close()
+
+
+def test_cross_thread_revoke_serializes_with_owner_mutations():
+    """The hierarchy's revoke listener fires on whatever thread ran the
+    preemptive grow (a sibling's RPC session thread in production).  It
+    mutates the VICTIM queue's pending/running, so it must hold that
+    queue's ``_api_lock`` — otherwise it races the owner's own
+    submit/step/cancel and can lose or duplicate jobs in the lists.
+    Here tenant A's high-priority growth revokes tenant B's grown job
+    from the main thread while B's owner thread churns the same queue,
+    then keeps hammering escalations against it."""
+    import time as _t
+
+    from repro.core import (JobState, MultiTenantTree, PreemptivePriority,
+                            TenantSpec)
+    root_g = build_cluster(nodes=2)
+    a_g = root_g.extract([p for p in root_g.paths() if "node0" in p])
+    b_g = root_g.extract([p for p in root_g.paths() if "node1" in p])
+    mt = MultiTenantTree(root_g, [
+        TenantSpec("A", a_g, policy=PreemptivePriority()),
+        TenantSpec("B", b_g)])
+    try:
+        ia, ib = mt.instance("A"), mt.instance("B")
+        NODE1 = Jobspec.hpc(nodes=1, sockets=2, cores=32)
+        errors = []
+        stop = threading.Event()
+
+        def owner():
+            try:
+                i = 0
+                while not stop.is_set():
+                    h = ib.submit(NODE1, walltime=None,
+                                  preemptible=True, jobid=f"own-{i}")
+                    ib.step()
+                    if h.state is JobState.PENDING:
+                        h.cancel()
+                    ib.stats()
+                    i += 1
+            except Exception as exc:     # pragma: no cover - fail loud
+                errors.append(exc)
+
+        t = threading.Thread(target=owner)
+        t.start()
+        try:
+            # wait until B holds its own node AND has grown into A's —
+            # the state a high-priority grow must revoke to satisfy
+            deadline = _t.monotonic() + 10.0
+            while _t.monotonic() < deadline and len(ib.running()) < 2:
+                _t.sleep(0.001)
+            for i in range(8):
+                hi = ia.submit(NODE1, walltime=None, priority=9,
+                               jobid=f"hi-{i}")
+                ia.step()
+                hi.cancel()
+        finally:
+            stop.set()
+        t.join(30.0)
+        assert not t.is_alive()
+        assert not errors, errors
+        # the revoke really happened, on the A-driving thread
+        evs = [e.type.value for e in ib.events_since(0)[0]]
+        assert evs.count("preempt") >= 1
+        qb = ib.queue
+        with qb._api_lock:
+            run = [j.jobid for j in qb.running]
+            pend = [j.jobid for j in qb.pending]
+            # no job lost into both lists, none duplicated
+            assert not (set(run) & set(pend)), (run, pend)
+            assert len(run) == len(set(run)) and len(pend) == len(set(pend))
+            # RUNNING jobs hold paths, queued ones hold none
+            assert all(j.paths for j in qb.running)
+            assert all(not j.paths for j in qb.pending)
+            assert all(j.state is JobState.RUNNING for j in qb.running)
+        for inst in mt.hierarchy.instances:
+            assert inst.graph.validate_tree(), inst.name
+        # B's journal stayed a total order throughout
+        seqs = [e.seq for e in ib.events_since(0)[0]]
+        assert seqs == sorted(seqs)
+    finally:
+        mt.close()

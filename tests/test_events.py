@@ -1,6 +1,8 @@
 """Event-semantics tests: total order per job, cursor replay == live
 subscription, the PREEMPT requeue sequence, and events riding
 ``SocketTransport`` unchanged."""
+import threading
+
 import pytest
 
 from repro.core import (EventLog, EventType, Instance, JobEvent, JobState,
@@ -183,3 +185,129 @@ def test_remote_tree_observes_same_event_sequence_as_inproc():
         remote.close()
         served.close()
         local.close()
+
+
+# ---------------------------------------------------------------------- #
+# delivery semantics: outside the lock, isolated, still in seq order
+# ---------------------------------------------------------------------- #
+def test_subscriber_exception_does_not_abort_emit():
+    """A bad subscriber must neither abort the emitting queue
+    operation mid-mutation nor starve the other subscribers."""
+    inst = _instance()
+    got = []
+
+    def bad(ev):
+        raise RuntimeError("boom")
+
+    inst.subscribe(bad)
+    inst.subscribe(got.append)
+    h = inst.submit(NODE, walltime=5.0)
+    inst.drain()
+    assert h.state is JobState.COMPLETED
+    replayed, _ = inst.events_since(0)
+    assert got == replayed
+
+
+def test_reentrant_emit_from_subscriber_preserves_seq_order():
+    """A subscriber emitting into the same log defers its event to the
+    active drain, so live delivery order equals seq/replay order."""
+    log = EventLog()
+    live = []
+
+    def echo(ev):
+        if ev.type is EventType.SUBMIT:
+            log.emit(EventType.FREE, ev.jobid)
+
+    log.subscribe(echo)
+    log.subscribe(live.append)
+    log.emit(EventType.SUBMIT, "a")
+    log.emit(EventType.SUBMIT, "b")
+    replayed, _ = log.since(0)
+    assert live == replayed
+    assert [e.type for e in live] == [EventType.SUBMIT, EventType.FREE,
+                                      EventType.SUBMIT, EventType.FREE]
+
+
+def test_callbacks_run_outside_the_log_lock():
+    """Delivery must not hold ``EventLog._lock`` across subscriber
+    code: another thread can emit while a subscriber is still running
+    (holding the lock here deadlocked emitters and invited lock-order
+    inversions with Instance verbs)."""
+    log = EventLog()
+    done = threading.Event()
+
+    def emit_from_other_thread():
+        log.emit(EventType.FREE, "inner")
+        done.set()
+
+    def sub(ev):
+        if ev.jobid != "outer":
+            return
+        t = threading.Thread(target=emit_from_other_thread)
+        t.start()
+        assert done.wait(5.0), "emit blocked on the log lock"
+        t.join(5.0)
+
+    log.subscribe(sub)
+    log.emit(EventType.SUBMIT, "outer")
+    events, _ = log.since(0)
+    assert [e.jobid for e in events] == ["outer", "inner"]
+
+
+def test_revoke_listener_takes_victim_queue_api_lock():
+    """A hierarchy revoke arrives on whatever thread ran the
+    preemptive grow; the victim queue's requeue — the mutation of its
+    pending/running lists — must happen under its ``_api_lock`` so it
+    serializes with the owner's own verbs.  (Event-subscriber context
+    is deliberately NOT the probe here: which thread runs a callback
+    is unspecified.)"""
+    root_g = build_cluster(nodes=2)
+    a_g = root_g.extract([p for p in root_g.paths() if "node0" in p])
+    b_g = root_g.extract([p for p in root_g.paths() if "node1" in p])
+    mt = MultiTenantTree(root_g, [
+        TenantSpec("A", a_g, policy=PreemptivePriority()),
+        TenantSpec("B", b_g)])
+    try:
+        held = []
+        qb = mt.queue("B")
+        requeue = qb._requeue
+
+        def probe(job):
+            held.append(qb._api_lock._is_owned())
+            return requeue(job)
+
+        qb._requeue = probe
+        # two node-sized jobs: the second grows into A's subtree, so
+        # A's high-priority submit must revoke it to reclaim node0
+        mt.instance("B").submit(NODE, walltime=100.0, preemptible=True)
+        mt.instance("B").submit(NODE, walltime=100.0, preemptible=True)
+        mt.step()
+        mt.instance("A").submit(NODE, walltime=10.0, priority=9)
+        mt.step()
+        assert held and all(held)
+        # and the PREEMPT really landed in B's journal
+        evs = [e.type for e in mt.instance("B").events_since(0)[0]]
+        assert EventType.PREEMPT in evs
+    finally:
+        mt.close()
+
+
+def test_late_subscriber_skips_parked_events():
+    """since()-then-subscribe handoff: a subscriber never receives an
+    event emitted before it subscribed — even one still parked for
+    delivery when the subscription lands (it would otherwise arrive
+    both via replay and live)."""
+    log = EventLog()
+    got = []
+    once = []
+
+    def sub1(ev):
+        if ev.type is EventType.SUBMIT and not once:
+            once.append(1)
+            log.emit(EventType.FREE, ev.jobid)   # parked behind drain
+            log.subscribe(got.append)            # joins after the park
+    log.subscribe(sub1)
+    log.emit(EventType.SUBMIT, "a")
+    assert got == []            # parked FREE predated the subscription
+    log.emit(EventType.SUBMIT, "b")
+    assert [e.jobid for e in got] == ["b"]

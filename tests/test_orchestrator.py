@@ -161,3 +161,61 @@ def test_reconcile_after_revocation():
             assert inst.graph.validate_tree(), inst.name
     finally:
         mt.close()
+
+
+def test_revocation_survives_journal_truncation():
+    """If reconcile falls more than ``maxlen`` events behind, the
+    bounded journal drops PREEMPT events.  The orchestrator must
+    detect the cursor gap and fall back to a full resync — cancelling
+    stale PREEMPTED replicas instead of leaking them back into the
+    queue (where they would later restart as untracked replicas)."""
+    from repro.core import (EventLog, Instance, JobQueue, JobState,
+                            PreemptivePriority, SchedulerInstance,
+                            SimClock)
+    g = build_cluster(nodes=1, sockets_per_node=2, cores_per_socket=8)
+    sched = SchedulerInstance("orch", g)
+    clock = SimClock()
+    q = JobQueue(sched, clock=clock, policy=PreemptivePriority(),
+                 eventlog=EventLog(clock=clock, maxlen=16))
+    inst = Instance(queue=q)
+    orch = Orchestrator(inst)
+    rs = orch.create(ReplicaSet("web", POD, desired=3))
+    assert rs.replicas == 3
+    # a high-priority job preempts every (preemptible) replica; with
+    # the single node taken they stay PREEMPTED in the pending queue
+    hi = inst.submit(Jobspec.hpc(nodes=1, sockets=2, cores=16),
+                     walltime=5.0, priority=9)
+    inst.step()
+    assert hi.state is JobState.RUNNING
+    assert len(inst.pending(rs.jobid)) == 3
+    # flood the journal well past maxlen so the PREEMPTs are dropped
+    for i in range(20):
+        inst.submit(POD, jobid=f"noise-{i}").cancel()
+    events, _ = inst.events_since(0)
+    assert all(e.type.value != "preempt" for e in events)
+    # reconcile detects the truncated cursor and resyncs anyway
+    orch.reconcile("web")
+    assert any(e.startswith("revoked:") for e in rs.events)
+    assert rs.replicas == 0                 # nothing fits around hi
+    assert inst.pending(rs.jobid) == []     # stale retries cancelled
+    # once hi finishes the next reconcile rebuilds exactly desired
+    inst.advance(5.0)
+    assert hi.state is JobState.COMPLETED
+    orch.reconcile("web")
+    assert rs.replicas == 3
+    assert len(inst.running(rs.jobid)) == 3
+
+
+def test_revoked_records_pruned_for_removed_replica_sets():
+    """PREEMPT records for a replica set that was deleted must not
+    accumulate in ``_revoked`` forever."""
+    from repro.core import EventType
+    orch = Orchestrator(_sched(nodes=1, cores=8))
+    orch.create(ReplicaSet("web", POD, desired=1))
+    orch.api.events.emit(EventType.PREEMPT, "rs-web-r0",
+                         alloc_id="rs-web")
+    orch._drain_events()
+    assert "rs-web" in orch._revoked
+    del orch.replica_sets["web"]
+    orch._drain_events()
+    assert "rs-web" not in orch._revoked

@@ -317,3 +317,26 @@ def test_completed_jobs_leave_no_empty_allocations():
         q.submit(NODE, walltime=2.0)
     q.drain()
     assert q.scheduler.allocations == {}
+
+
+def test_shrink_rejects_invalid_count():
+    """``count <= 0`` (or no arguments at all) must be rejected before
+    the slice is computed: a negative count would slice from the FRONT
+    of ``job.paths`` and silently release most of the allocation — and
+    this surface is remotely reachable via the RPC ``shrink`` verb."""
+    q = _queue(nodes=2)
+    job = q.submit(NODE, walltime=None)
+    q.step()
+    assert job.state is JobState.RUNNING
+    n = len(job.paths)
+    for bad in (-2, 0, None):
+        assert not q.shrink_job(job.jobid, count=bad)
+        assert len(job.paths) == n          # nothing was released
+    exc = [e for e in q.eventlog.for_job(job.jobid)
+           if e.type.value == "exception"]
+    assert len(exc) == 3
+    assert all(e.detail["reason"] == "invalid shrink count" for e in exc)
+    # a positive count still shrinks
+    assert q.shrink_job(job.jobid, count=1)
+    assert len(job.paths) == n - 1
+    assert q.scheduler.graph.validate_tree()
