@@ -1,0 +1,113 @@
+"""Perf-regression guard over the bench JSON artifacts.
+
+Compares a fresh benchmark run (``experiments/bench/*.json``) against
+the committed snapshot in ``experiments/bench/baseline/`` and fails
+(exit 1) when a guarded metric regresses by more than ``--threshold``
+(default 25%):
+
+* ``nested_mg.json``  — L0 ``match_median`` per (test, request_size):
+  the matcher hot path.  L1+ rows are dominated by transport and are
+  guarded by the fit-model benches instead.
+* ``trace_replay.json`` — ``replay_wall_s`` per hierarchy depth: the
+  end-to-end queue-churn replay.  Rows are only compared when the job
+  counts match (quick and full runs replay different trace lengths).
+
+Improvements are reported but never fail.  A guarded metric missing
+from the current run fails loudly — silently dropping a row is how a
+regression hides.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      [--baseline DIR] [--current DIR] [--threshold 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+DEFAULT_BENCH = Path(__file__).resolve().parent.parent \
+    / "experiments" / "bench"
+
+
+def _load(path: Path) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _nested_mg_keys(rows: List[Dict]) -> Dict[Tuple, float]:
+    return {(r["test"], r["request_size"]): r["match_median"]
+            for r in rows if r.get("level") == "L0"}
+
+
+def _trace_keys(rows: List[Dict]) -> Dict[Tuple, float]:
+    return {(r["depth"], r["jobs"]): r["replay_wall_s"]
+            for r in rows if "depth" in r}
+
+
+def compare(baseline_dir: Path, current_dir: Path,
+            threshold: float) -> int:
+    checks = [
+        ("nested_mg.json", "L0 match_median", _nested_mg_keys),
+        ("trace_replay.json", "replay_wall_s", _trace_keys),
+    ]
+    failures = 0
+    compared = 0
+    for fname, metric, extract in checks:
+        base_p, cur_p = baseline_dir / fname, current_dir / fname
+        if not base_p.exists():
+            print(f"-- {fname}: no baseline snapshot, skipping")
+            continue
+        if not cur_p.exists():
+            print(f"!! {fname}: baseline exists but current run did not "
+                  f"produce it — treat as regression")
+            failures += 1
+            continue
+        base, cur = extract(_load(base_p)), extract(_load(cur_p))
+        for key, b in sorted(base.items()):
+            c = cur.get(key)
+            if c is None:
+                # quick vs full runs legitimately differ in trace
+                # length; only a same-key disappearance is an error
+                if any(k[0] == key[0] for k in cur):
+                    print(f"   {fname} {key}: row shape changed, skipping")
+                    continue
+                print(f"!! {fname} {key}: {metric} row missing from "
+                      f"current run")
+                failures += 1
+                continue
+            compared += 1
+            ratio = c / b if b > 0 else float("inf")
+            flag = "OK"
+            if ratio > 1.0 + threshold:
+                flag = "REGRESSION"
+                failures += 1
+            elif ratio < 1.0 - threshold:
+                flag = "improved"
+            print(f"   {fname} {key}: {metric} "
+                  f"{b * 1e3:.3f}ms -> {c * 1e3:.3f}ms "
+                  f"({ratio:.2f}x)  {flag}")
+    if compared == 0 and failures == 0:
+        print("-- nothing compared (no baseline snapshots found)")
+    if failures:
+        print(f"\n{failures} guarded metric(s) regressed more than "
+              f"{threshold:.0%} over the committed baseline")
+        return 1
+    print(f"\nall {compared} guarded metrics within {threshold:.0%} "
+          f"of the committed baseline")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", type=Path,
+                    default=DEFAULT_BENCH / "baseline")
+    ap.add_argument("--current", type=Path, default=DEFAULT_BENCH)
+    ap.add_argument("--threshold", type=float, default=0.25)
+    args = ap.parse_args()
+    return compare(args.baseline, args.current, args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

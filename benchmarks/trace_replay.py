@@ -1,6 +1,6 @@
 """Workload-trace replay: submit/complete churn through the job queue.
 
-Two modes:
+Four modes:
 
 * **depth sweep** (default) — replays a synthetic job trace
   (Poisson-ish arrivals, mixed request sizes, finite walltimes)
@@ -18,8 +18,29 @@ Two modes:
   preemptive-priority policy must buy high-priority jobs a lower mean
   wait than EASY on the same trace.
 
+* **scale replay** (``--scale [--jobs 100000]``) — one instance, one
+  long trace, throughput curves: MG/s and match-time percentiles
+  bucketed by the queue depth each job saw at submit, plus per-segment
+  jobs/s over the run.  The trace is overloaded on purpose, so the
+  replay runs EASY with a bounded backfill window (64 candidates, the
+  Slurm ``bf_max_job_test`` analogue) — with the queue's failed-match
+  memo this keeps throughput flat as the backlog grows.  Results land
+  in ``experiments/bench/trace_throughput.json``; this is the artifact
+  the weekly trace-scale lane records the matcher's trajectory with.
+* **actor comparison** (``--actors``) — the same contended multi-tenant
+  trace replayed twice over socket-linked sibling subtrees: once
+  single-driver (``MultiTenantTree.step`` serializes tenants), once
+  with per-instance actor loops (``core/actor.py`` — sibling reclaim
+  RPC waits overlap).  Results land in
+  ``experiments/bench/actor_compare.json``.
+
+``--profile`` (any mode) wraps the replay in cProfile and writes the
+raw ``.prof`` plus a top-N cumulative table into the artifacts dir.
+
   PYTHONPATH=src python -m benchmarks.trace_replay [--quick]
   PYTHONPATH=src python -m benchmarks.trace_replay --policies [--jobs N]
+  PYTHONPATH=src python -m benchmarks.trace_replay --scale --jobs 100000
+  PYTHONPATH=src python -m benchmarks.trace_replay --actors
 
 ``--jobs 10000 --policies`` is the scheduled scale run CI records the
 perf trajectory with (see .github/workflows/ci.yml).
@@ -32,10 +53,12 @@ import sys
 import time
 from typing import Dict, List
 
-from repro.core import (Hierarchy, Instance, Jobspec, SimClock, build_chain,
+from repro.core import (EasyBackfill, Hierarchy, Instance, Jobspec,
+                        SimClock, build_chain,
                         build_cluster, make_policy)
+from repro.core.tenancy import MultiTenantTree, TenantSpec
 
-from .common import emit, print_table
+from .common import OUT_DIR, emit, print_table, summarize
 
 # leaf first in spirit: depth -> per-level node counts, top first
 DEPTH_LEVELS = {
@@ -245,6 +268,233 @@ def run(n_jobs: int = 200, seed: int = 0) -> List[Dict]:
     return rows
 
 
+# ---------------------------------------------------------------------- #
+# scale replay with throughput curves (--scale)
+# ---------------------------------------------------------------------- #
+DEPTH_BUCKETS = [(0, "0"), (1, "1"), (3, "2-3"), (7, "4-7"),
+                 (15, "8-15"), (63, "16-63"), (1 << 30, "64+")]
+
+
+def _bucket(depth: int) -> str:
+    for hi, label in DEPTH_BUCKETS:
+        if depth <= hi:
+            return label
+    return DEPTH_BUCKETS[-1][1]
+
+
+def replay_scale(n_jobs: int, seed: int = 0, nodes: int = 16,
+                 segments: int = 10) -> List[Dict]:
+    """One instance, one long trace; emits the throughput curves the
+    weekly lane tracks: match-time percentiles per queue-depth bucket
+    (does the matcher degrade as the backlog builds?) and jobs/s +
+    MG/s per trace segment (does throughput hold over 100k jobs?)."""
+    trace = make_trace(n_jobs, seed=seed)
+    g = build_cluster(nodes=nodes)
+    clock = SimClock()
+    # the trace is deliberately overloaded (~17% past capacity), so the
+    # backlog grows without bound; a bounded EASY backfill window keeps
+    # per-kick match work O(window) instead of O(backlog) — without it
+    # total MG attempts go quadratic and 100k jobs never finishes
+    policy = EasyBackfill(max_candidates=64)
+    inst = Instance(graph=g, name="scale", clock=clock, allow_grow=True,
+                    policy=policy)
+    sched = inst.scheduler
+    q = inst.queue
+    by_bucket: Dict[str, List[float]] = {}
+    seg_len = max(n_jobs // segments, 1)
+    seg_rows: List[Dict] = []
+    t0 = time.perf_counter()
+    seg_t = t0
+    seg_mg = 0
+    n_mg = 0
+    for i, entry in enumerate(trace):
+        inst.advance(max(entry["arrival"] - clock.now(), 0.0))
+        inst.submit(entry["jobspec"], walltime=entry["walltime"],
+                    priority=entry["priority"])
+        depth = len(q.pending)
+        inst.step()
+        # consume-and-clear: at ~60 MG attempts per job a 100k-job
+        # replay would otherwise retain millions of MGTiming records
+        new = sched.timings
+        sched.timings = []
+        n_mg += len(new)
+        if new:
+            by_bucket.setdefault(_bucket(depth), []).extend(
+                t.t_match for t in new)
+        if (i + 1) % seg_len == 0 or i + 1 == n_jobs:
+            now = time.perf_counter()
+            seg_rows.append({
+                "kind": "segment",
+                "jobs_done": i + 1,
+                "wall_s": now - seg_t,
+                "jobs_per_s": seg_len / max(now - seg_t, 1e-12),
+                "mg_per_s": (n_mg - seg_mg) / max(now - seg_t, 1e-12),
+            })
+            seg_t, seg_mg = now, n_mg
+    inst.drain()
+    n_mg += len(sched.timings)
+    wall = time.perf_counter() - t0
+    s = inst.stats()
+    assert s.completed == s.submitted, \
+        f"scale: {s.submitted - s.completed} jobs never ran"
+    assert g.validate_tree()
+    rows: List[Dict] = [{
+        "kind": "summary",
+        "jobs": s.submitted,
+        "completed": s.completed,
+        "n_mg": n_mg,
+        "replay_wall_s": wall,
+        "jobs_per_s": s.completed / wall,
+        "mg_per_s": n_mg / wall,
+        "utilization": s.utilization,
+        "makespan_s": s.makespan,
+    }]
+    for _, label in DEPTH_BUCKETS:
+        ts = by_bucket.get(label)
+        if not ts:
+            continue
+        st = summarize(ts)
+        rows.append({
+            "kind": "depth_bucket", "queue_depth": label, "n": st["n"],
+            "match_p50_ms": st["median"] * 1e3,
+            "match_p75_ms": st["p75"] * 1e3,
+            "match_max_ms": st["max"] * 1e3,
+        })
+    rows.extend(seg_rows)
+    print_table(
+        f"scale replay ({n_jobs} jobs, {nodes}-node cluster)",
+        rows[:1], ["jobs", "completed", "n_mg", "replay_wall_s",
+                   "jobs_per_s", "mg_per_s", "utilization"])
+    print_table(
+        "match-time percentiles vs queue depth at submit",
+        [r for r in rows if r["kind"] == "depth_bucket"],
+        ["queue_depth", "n", "match_p50_ms", "match_p75_ms",
+         "match_max_ms"])
+    print_table(
+        "throughput per trace segment",
+        [r for r in rows if r["kind"] == "segment"],
+        ["jobs_done", "wall_s", "jobs_per_s", "mg_per_s"])
+    emit("trace_throughput", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------- #
+# actor loops vs single driver (--actors)
+# ---------------------------------------------------------------------- #
+def make_sibling_trace(n_jobs: int, n_tenants: int,
+                       seed: int = 0) -> List[Dict]:
+    """Contended multi-tenant trace: each tenant owns a 2-node subtree;
+    ~35% of jobs want 2 nodes, so with local nodes busy they reclaim
+    free resources from sibling subtrees through the parent — the
+    socket-RPC-heavy path whose wait time the actor loops overlap."""
+    rng = random.Random(seed)
+    t = 0.0
+    trace = []
+    for _ in range(n_jobs):
+        t += rng.expovariate(1.2)
+        wide = rng.random() < 0.35
+        nodes = 2 if wide else 1
+        trace.append({
+            "arrival": t,
+            "tenant": rng.randrange(n_tenants),
+            "jobspec": Jobspec.hpc(nodes=nodes, sockets=2 * nodes,
+                                   cores=32 * nodes),
+            "walltime": rng.uniform(1.0, 6.0),
+        })
+    return trace
+
+
+LINK_LATENCY_S = 0.0005  # 0.5 ms one-way, the paper's internode regime
+
+
+def replay_tenants(actors: bool, trace: List[Dict],
+                   n_tenants: int = 4) -> Dict:
+    root = build_cluster(name="root", nodes=2 * n_tenants)
+    subs = []
+    for i in range(n_tenants):
+        keep = [p for k in (2 * i, 2 * i + 1)
+                for p in root.subtree(f"/root/node{k}")]
+        subs.append(root.extract(keep))
+    # loopback TCP round-trips in ~µs, which would hide the internode
+    # link cost the actor loops exist to overlap; LINK_LATENCY_S restores
+    # a realistic per-RPC wait (sleep releases the GIL, so concurrent
+    # tenants' link waits genuinely overlap).
+    mt = MultiTenantTree(
+        root,
+        [TenantSpec(f"t{i}", subs[i], allow_grow=True, socket=True,
+                    link_latency_s=LINK_LATENCY_S)
+         for i in range(n_tenants)],
+        clock=SimClock(), actors=actors)
+    try:
+        clock = mt.clock
+        t0 = time.perf_counter()
+        for entry in trace:
+            mt.advance(max(entry["arrival"] - clock.now(), 0.0))
+            mt.queue(f"t{entry['tenant']}").submit(
+                entry["jobspec"], walltime=entry["walltime"])
+            mt.step()
+        completed = mt.drain()
+        wall = time.perf_counter() - t0
+        stats = [q.stats() for q in mt.queues.values()]
+        n_sub = sum(s.submitted for s in stats)
+        n_done = sum(s.completed for s in stats)
+        assert n_done == n_sub, f"{n_sub - n_done} jobs never ran"
+        return {
+            "mode": "actors" if actors else "single-driver",
+            "tenants": n_tenants,
+            "jobs": n_sub,
+            "completed": len(completed),
+            "replay_wall_s": wall,
+            "jobs_per_s": n_done / wall,
+            "makespan_s": clock.now(),
+        }
+    finally:
+        mt.close()
+
+
+def run_actors(n_jobs: int = 240, seed: int = 0,
+               n_tenants: int = 4) -> List[Dict]:
+    rows = []
+    for actors in (False, True):
+        trace = make_sibling_trace(n_jobs, n_tenants, seed=seed)
+        rows.append(replay_tenants(actors, trace, n_tenants))
+    print_table(
+        "actor loops vs single driver (socket-linked sibling subtrees)",
+        rows, ["mode", "tenants", "jobs", "completed", "replay_wall_s",
+               "jobs_per_s", "makespan_s"])
+    speedup = rows[0]["replay_wall_s"] / rows[1]["replay_wall_s"]
+    print(f"\nactor speedup over single driver: {speedup:.2f}x")
+    rows.append({"kind": "speedup", "actors_vs_single": speedup})
+    emit("actor_compare", rows)
+    return rows
+
+
+# ---------------------------------------------------------------------- #
+def _maybe_profile(enabled: bool, tag: str, fn):
+    """Run ``fn`` under cProfile when enabled: raw .prof + top-30
+    cumulative table land next to the bench JSON artifacts."""
+    if not enabled:
+        return fn()
+    import cProfile
+    import io
+    import pstats
+    prof = cProfile.Profile()
+    prof.enable()
+    try:
+        return fn()
+    finally:
+        prof.disable()
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        prof.dump_stats(OUT_DIR / f"profile_{tag}.prof")
+        buf = io.StringIO()
+        pstats.Stats(prof, stream=buf).sort_stats(
+            "cumulative").print_stats(30)
+        (OUT_DIR / f"profile_{tag}.txt").write_text(buf.getvalue())
+        print(f"\n== cProfile top-30 by cumulative ({tag}) ==")
+        print("\n".join(buf.getvalue().splitlines()[:40]))
+        print(f"[artifacts: profile_{tag}.prof / .txt in {OUT_DIR}]")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -255,14 +505,37 @@ def main(argv=None) -> int:
                     help="replay one contended trace under "
                          f"{{{','.join(POLICY_SET)}}} instead of the "
                          "depth sweep")
+    ap.add_argument("--scale", action="store_true",
+                    help="single-instance scale replay with throughput "
+                         "curves (default --jobs 100000)")
+    ap.add_argument("--actors", action="store_true",
+                    help="actor loops vs single driver on a contended "
+                         "multi-tenant trace")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile the replay; dump .prof + top-N "
+                         "table into the artifacts dir")
     args = ap.parse_args(argv)
+    if args.scale:
+        n = args.jobs if args.jobs is not None else \
+            (5000 if args.quick else 100_000)
+        _maybe_profile(args.profile, "scale",
+                       lambda: replay_scale(n_jobs=n, seed=args.seed))
+        return 0
+    if args.actors:
+        n = args.jobs if args.jobs is not None else \
+            (80 if args.quick else 240)
+        _maybe_profile(args.profile, "actors",
+                       lambda: run_actors(n_jobs=n, seed=args.seed))
+        return 0
     if args.policies:
         n = args.jobs if args.jobs is not None else \
             (120 if args.quick else 300)
-        run_policies(n_jobs=n, seed=args.seed)
+        _maybe_profile(args.profile, "policies",
+                       lambda: run_policies(n_jobs=n, seed=args.seed))
         return 0
     n = args.jobs if args.jobs is not None else (60 if args.quick else 200)
-    run(n_jobs=n, seed=args.seed)
+    _maybe_profile(args.profile, "depth",
+                   lambda: run(n_jobs=n, seed=args.seed))
     return 0
 
 

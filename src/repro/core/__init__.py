@@ -2,6 +2,8 @@
 from .graph import CONTAINMENT, ResourceGraph, Vertex, build_cluster, build_tpu_fleet
 from .jobspec import Jobspec, ResourceReq
 from .match import Matcher
+from .flatgraph import FlatGraph, FlatMatcher, flat_enabled
+from .actor import ActorGroup, QueueActor, check_actor_safe
 from .transform import (TransformKind, TransformResult, add_subgraph,
                         remove_subgraph, update_metadata)
 from .engine import Allocation, GrowEngine, GrowResult, MGTiming
@@ -22,7 +24,9 @@ from .rpc import MethodRegistry
 
 __all__ = [
     "CONTAINMENT", "ResourceGraph", "Vertex", "build_cluster",
-    "build_tpu_fleet", "Jobspec", "ResourceReq", "Matcher", "TransformKind",
+    "build_tpu_fleet", "Jobspec", "ResourceReq", "Matcher",
+    "FlatGraph", "FlatMatcher", "flat_enabled",
+    "ActorGroup", "QueueActor", "check_actor_safe", "TransformKind",
     "TransformResult", "add_subgraph", "remove_subgraph", "update_metadata",
     "Allocation", "GrowEngine", "GrowResult", "Hierarchy", "MGTiming",
     "SchedulerInstance", "TreeSpec", "build_chain", "build_tree",

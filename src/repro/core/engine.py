@@ -199,14 +199,20 @@ class GrowEngine:
             if paths is not None:
                 host.graph.set_allocated(paths, jobid)
                 self._book(jobid, paths)
-                sub = host.graph.extract(paths)
+                if encode:
+                    sub = host.graph.extract(paths)
+                    size = sub.size
+                else:
+                    # caller-side grow: nobody consumes the subgraph, so
+                    # don't materialize it — just its size accounting
+                    size = host.graph.extent_size(paths)
         if paths is not None:
             rec.matched_locally = True
-            rec.matched_size = sub.size
+            rec.matched_size = size
             host.timings.append(rec)
-            self._emit_grow(jobid, "local", sub.size)
+            self._emit_grow(jobid, "local", size)
             return GrowResult(
-                True, new_paths=list(paths), size=sub.size, via="local",
+                True, new_paths=list(paths), size=size, via="local",
                 timing=rec,
                 jgf=sub.to_jgf_bytes() if encode else None)
 

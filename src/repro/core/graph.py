@@ -128,6 +128,27 @@ class ResourceGraph:
         self._by_type: Dict[str, Set[str]] = {}
         self._next_id = 0
         self.roots: List[str] = []
+        # flat-array mirror (core/flatgraph.py), attached lazily by
+        # flat(); every mutation primitive notifies it so it stays
+        # incrementally consistent — no full rebuilds under churn.
+        self._flat = None
+        # bumped by every match-relevant mutation (structure, free
+        # flips, status flips).  Equal versions guarantee equal match
+        # results, so queues can memoize failed matches between graph
+        # events instead of re-running the same failing DFS.
+        self.version = 0
+        # counts init_aggregates() full rebuilds; the churn property
+        # tests assert this stays frozen across alloc/release/splice/
+        # revoke (rebuilds are a build-time-only cost).
+        self.n_agg_rebuilds = 0
+
+    def flat(self):
+        """The flat-array mirror of this graph (built on first use,
+        maintained incrementally afterwards).  See ``core/flatgraph``."""
+        if self._flat is None:
+            from .flatgraph import FlatGraph
+            self._flat = FlatGraph(self)
+        return self._flat
 
     # ------------------------------------------------------------------ #
     # basic accessors
@@ -209,6 +230,9 @@ class ResourceGraph:
             self.roots.append(v.path)
         # own contribution to pruning aggregate
         v.agg_free = {v.type: 1 if v.free else 0}
+        self.version += 1
+        if self._flat is not None:
+            self._flat.on_add(v)
         return v
 
     def add_edge(self, src: str, dst: str) -> None:
@@ -219,11 +243,17 @@ class ResourceGraph:
         if self._parent.get(dst) is None and dst in self.roots:
             self.roots.remove(dst)
         self._parent[dst] = src
+        self.version += 1
+        if self._flat is not None:
+            self._flat.on_edge(src, dst)
 
     def remove_vertex(self, path: str) -> None:
         v = self._v.pop(path, None)
         if v is None:
             return
+        self.version += 1
+        if self._flat is not None:
+            self._flat.on_remove(path)
         self._by_type.get(v.type, set()).discard(path)
         par = self._parent.pop(path, None)
         if par is not None and par in self._children:
@@ -241,7 +271,12 @@ class ResourceGraph:
     # pruning-filter metadata (localized updates)
     # ------------------------------------------------------------------ #
     def init_aggregates(self) -> None:
-        """(Re)build subtree free-count aggregates bottom-up in O(n)."""
+        """(Re)build subtree free-count aggregates bottom-up in O(n).
+
+        Build-time only: the dynamic paths (alloc/release/splice/
+        revoke) maintain aggregates via localized ``_bubble`` deltas —
+        ``n_agg_rebuilds`` makes any hot-path regression visible."""
+        self.n_agg_rebuilds += 1
         # post-order: children before parents
         order: List[str] = []
         for root in self.roots:
@@ -253,6 +288,8 @@ class ResourceGraph:
                 for t, n in self._v[c].agg_free.items():
                     agg[t] = agg.get(t, 0) + n
             v.agg_free = agg
+        if self._flat is not None:
+            self._flat.on_rebuild()
 
     def _bubble(self, path: str, delta: Dict[str, int]) -> int:
         """Apply ``delta`` to the aggregates of ``path``'s ancestors.
@@ -279,6 +316,10 @@ class ResourceGraph:
             if was_free:
                 v.agg_free[v.type] = v.agg_free.get(v.type, 1) - 1
                 touched[path] = {v.type: -1}
+                if self._flat is not None:
+                    self._flat.on_flip(path, v)
+        if touched:
+            self.version += 1
         self._bubble_group(touched, pset)
 
     def set_free(self, paths: Iterable[str], jobid: str) -> None:
@@ -293,7 +334,28 @@ class ResourceGraph:
             if was_allocated and v.free:
                 v.agg_free[v.type] = v.agg_free.get(v.type, 0) + 1
                 touched[path] = {v.type: +1}
+                if self._flat is not None:
+                    self._flat.on_flip(path, v)
+        if touched:
+            self.version += 1
         self._bubble_group(touched, pset)
+
+    def set_status(self, path: str, status: str) -> None:
+        """Flip a vertex's UP/DOWN status with a localized aggregate
+        update (the fault path: a DOWN vertex leaves the pruning
+        aggregates immediately, so matchers never descend toward it)."""
+        v = self._v.get(path)
+        if v is None or v.status == status:
+            return
+        was = v.free
+        v.status = status
+        if was != v.free:
+            d = 1 if v.free else -1
+            v.agg_free[v.type] = v.agg_free.get(v.type, 0) + d
+            self._bubble(path, {v.type: d})
+            self.version += 1
+            if self._flat is not None:
+                self._flat.on_flip(path, v)
 
     def reassign(self, paths: Iterable[str], jobid: str) -> None:
         """Hand vertices over to ``jobid``.
@@ -377,6 +439,23 @@ class ResourceGraph:
                 sub.add_edge(par, path)
         sub.init_aggregates()
         return sub
+
+    def extent_size(self, paths: Iterable[str],
+                    include_ancestors: bool = True) -> int:
+        """|V|+|E| of the subgraph :meth:`extract` would build, without
+        building it — the matched-subgraph-size accounting for grows
+        that skip encoding."""
+        keep: Set[str] = set(paths)
+        if include_ancestors:
+            extra: Set[str] = set()
+            for p in keep:
+                for anc in self.ancestors(p):
+                    if anc in keep or anc in extra:
+                        break
+                    extra.add(anc)
+            keep |= extra
+        edges = sum(1 for p in keep if self._parent.get(p) in keep)
+        return len(keep) + edges
 
     # ------------------------------------------------------------------ #
     # JGF serialization

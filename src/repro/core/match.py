@@ -5,6 +5,13 @@ per-vertex subtree free-count aggregates maintained by ``ResourceGraph``
 (the analogue of Fluxion's ``ALL:core`` pruning filter): a subtree is
 never entered if it cannot possibly satisfy the remaining request, so
 allocated subtrees are skipped (paper Section 5.2.3).
+
+By default matching runs on the graph's flat-array mirror
+(``core/flatgraph.FlatMatcher``) — same traversal, same claims, same
+result, via contiguous arrays and a vectorized feasibility prefilter.
+The dict DFS below remains the oracle: ``Matcher(g, use_flat=False)``
+(or env ``CONVERGED_FLAT_MATCH=0``) forces it, and the tier-1 suite
+asserts both return identical matches.
 """
 from __future__ import annotations
 
@@ -17,10 +24,20 @@ from .jobspec import Jobspec, ResourceReq
 class Matcher:
     """DFS matcher over a ResourceGraph."""
 
-    def __init__(self, graph: ResourceGraph):
+    def __init__(self, graph: ResourceGraph,
+                 use_flat: Optional[bool] = None):
         self.g = graph
         # visit statistics, useful for verifying pruning behaviour
         self.visited = 0
+        self._auto = use_flat is None
+        if use_flat is None:
+            from .flatgraph import FLAT_MIN_VERTICES, flat_enabled
+            # small graphs match faster through the dict DFS than the
+            # flat path's fixed per-match setup; the cutoff re-evaluates
+            # per Matcher, so a graph that grows past it switches over
+            use_flat = (flat_enabled()
+                        and graph.num_vertices >= FLAT_MIN_VERTICES)
+        self.use_flat = use_flat
 
     # ------------------------------------------------------------------ #
     def match(self, jobspec: Jobspec) -> Optional[List[str]]:
@@ -29,6 +46,20 @@ class Matcher:
         Matching is exclusive: a matched vertex must be free, and all
         vertices named by the (nested) request under it are claimed.
         """
+        use_flat = self.use_flat
+        if use_flat and self._auto:
+            # auto dispatch also weighs the request: a small request on
+            # a big graph rides the pruned dict spine in microseconds,
+            # under the flat path's per-match setup cost
+            from .flatgraph import FLAT_REQ_RATIO
+            use_flat = (jobspec.graph_size() * FLAT_REQ_RATIO
+                        >= self.g.num_vertices)
+        if use_flat:
+            from .flatgraph import FlatMatcher
+            fm = FlatMatcher(self.g.flat())
+            got = fm.match(jobspec)
+            self.visited = fm.visited
+            return got
         self.visited = 0
         matched: List[str] = []
         claimed: Set[str] = set()
@@ -45,10 +76,11 @@ class Matcher:
         return matched
 
     # ------------------------------------------------------------------ #
-    def _prune(self, path: str, req: ResourceReq, needed: int) -> bool:
-        """True if the subtree at ``path`` cannot hold ``needed`` free
-        vertices of ``req.type`` (pruning filter)."""
-        v = self.g.vertex(path)
+    @staticmethod
+    def _prune(v: Vertex, req: ResourceReq, needed: int) -> bool:
+        """True if the subtree at ``v`` cannot hold ``needed`` free
+        vertices of ``req.type`` (pruning filter).  Takes the Vertex
+        the caller already holds — one dict lookup per visit, not two."""
         return v.agg_free.get(req.type, 0) < needed
 
     def _satisfies(self, v: Vertex, req: ResourceReq) -> bool:
@@ -76,7 +108,7 @@ class Matcher:
                 continue
             self.visited += 1
             v = self.g.vertex(path)
-            if self._prune(path, req, 1):
+            if self._prune(v, req, 1):
                 continue  # no free req.type anywhere below — skip subtree
             if self._satisfies(v, req):
                 sub = self._match_one(path, req, claimed, local_claim)
@@ -116,9 +148,9 @@ class Matcher:
             if path in claimed or path in inner:
                 continue
             self.visited += 1
-            if self._prune(path, req, 1):
-                continue
             v = self.g.vertex(path)
+            if self._prune(v, req, 1):
+                continue
             if self._satisfies(v, req):
                 sub = self._match_one_under(path, req, claimed, inner)
                 if sub is not None:

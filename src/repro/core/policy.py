@@ -102,15 +102,23 @@ class EasyBackfill(PriorityFCFS):
 
     name = "easy"
 
-    def __init__(self, spare_capacity: bool = True):
+    def __init__(self, spare_capacity: bool = True,
+                 max_candidates: Optional[int] = None):
         self.spare_capacity = spare_capacity
+        # backfill window (Slurm's bf_max_job_test): at most this many
+        # pending jobs are examined per pass.  None = unbounded — exact
+        # EASY, but on an overloaded trace the per-kick scan grows with
+        # the backlog and total match work goes O(jobs x backlog).
+        self.max_candidates = max_candidates
 
     def backfill(self, queue: "JobQueue", head: "Job") -> int:
         now = queue.clock.now()
         shadow = shadow_time(queue, head)
         structural = not _deficit(queue, head)
         started = 0
-        for job in list(queue.pending[1:]):
+        stop = None if self.max_candidates is None \
+            else 1 + self.max_candidates
+        for job in queue.pending[1:stop]:
             if job.walltime is None:
                 continue            # unbounded jobs can never backfill
             if shadow is not None and now + job.walltime > shadow:
@@ -320,12 +328,21 @@ def _cannot_fit(queue: "JobQueue", job: "Job") -> bool:
 
 
 def _path_type_counts(queue: "JobQueue", job: "Job") -> Dict[str, int]:
+    # memoized per job: every transition that changes a job's path set
+    # (start, grow, shrink, requeue) changes len(paths), and a running
+    # job's bound vertices stay in the graph until it releases them —
+    # so the backfill passes that call this once per running job per
+    # pass (reservation profiles, shadow time) reuse one computation
+    cached = getattr(job, "_ptc_cache", None)
+    if cached is not None and cached[0] == len(job.paths):
+        return cached[1]
     g = queue.scheduler.graph
     out: Dict[str, int] = {}
     for p in job.paths:
         v = g.get(p)
         if v is not None:
             out[v.type] = out.get(v.type, 0) + 1
+    job._ptc_cache = (len(job.paths), out)
     return out
 
 

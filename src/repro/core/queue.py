@@ -54,6 +54,7 @@ Policy, delegated (see ``core/policy.py``):
 """
 from __future__ import annotations
 
+import bisect
 import enum
 import itertools
 import threading
@@ -142,6 +143,11 @@ class Job:
     preemptions: int = 0                # times displaced and requeued
     requeue_wait: float = 0.0           # time spent PREEMPTED, total
     preempted_at: Optional[float] = None
+    # queue-internal memo: graph.version at which this job last failed
+    # to match.  While the graph is unchanged the same DFS would fail
+    # identically, so _try_start skips it (deep-backlog replays would
+    # otherwise re-run every pending job's failing match per kick).
+    nogo_version: Optional[int] = None
 
     @property
     def wait_time(self) -> Optional[float]:
@@ -262,8 +268,9 @@ class JobQueue:
                       grow=grow, seq=seq, preemptible=preemptible)
             self._by_id[jobid] = job
             self._version += 1
-            self.pending.append(job)
-            self.pending.sort(key=self.policy.sort_key)
+            # insort_right == append + stable sort, without the O(n)
+            # key calls per submit a 100k-deep backlog would pay
+            bisect.insort(self.pending, job, key=self.policy.sort_key)
             self._log(f"t={job.submit_time:.3f} submit {jobid}")
             self.eventlog.emit(EventType.SUBMIT, jobid,
                                alloc_id=job.alloc_id,
@@ -432,11 +439,24 @@ class JobQueue:
     def _try_start(self, job: Job) -> bool:
         sched = self.scheduler
         grow = self.allow_grow if job.grow is None else job.grow
+        # With no parent, no external provider, and a non-preemptive
+        # policy, a match attempt is a pure function of the local
+        # graph: a job that failed at this graph version fails again
+        # until something mutates it.  (A parent, cloud bursting, or
+        # preemption makes the outcome depend on remote state or revoke
+        # side effects, so no memo; kick() clears memos for the
+        # mutate-a-Job-from-outside contract.)
+        pure = (sched.parent is None and sched.external is None
+                and not self.policy.preemptive)
+        if pure and job.nogo_version == sched.graph.version:
+            return False
         if grow:
             res = sched.match_grow(job.jobspec, job.alloc_id,
                                    priority=job.priority,
                                    preempt=self.policy.preemptive)
             if not res:
+                if pure:
+                    job.nogo_version = sched.graph.version
                 return False
             job.paths = res.paths()
             job.via = res.via
@@ -450,6 +470,8 @@ class JobQueue:
             n_prev = len(prev.paths) if prev is not None else 0
             alloc = sched.match_allocate(job.jobspec, jobid=job.alloc_id)
             if alloc is None:
+                if pure:
+                    job.nogo_version = sched.graph.version
                 return False
             job.paths = list(alloc.paths[n_prev:])
             job.via = "local"
@@ -612,8 +634,7 @@ class JobQueue:
         job.preempted_at = now
         self.n_preemptions += 1
         self._sync_alloc_meta(job.alloc_id)
-        self.pending.append(job)
-        self.pending.sort(key=self.policy.sort_key)
+        bisect.insort(self.pending, job, key=self.policy.sort_key)
         self._version += 1
         self._log(f"t={now:.3f} preempt {job.jobid} "
                   f"(n={job.preemptions})")
@@ -626,6 +647,8 @@ class JobQueue:
         a pending Job from outside the queue's own API."""
         with self._api_lock:
             self._version += 1
+            for job in self.pending:
+                job.nogo_version = None
 
     def _schedule(self) -> int:
         # nothing changed since the last full pass ended blocked: a

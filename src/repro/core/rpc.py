@@ -24,6 +24,7 @@ import json
 import socket
 import struct
 import threading
+import time
 from typing import Callable, Dict, Optional, Tuple
 
 Handler = Callable[[str, bytes], bytes]
@@ -177,13 +178,22 @@ class SocketTransport(Transport):
     finds the pool empty dials a fresh connection; surplus connections
     beyond the pool size are closed on check-in rather than retained.
     A connection that died between calls is redialed once.
+
+    ``latency_s`` adds a simulated one-way link latency per call:
+    loopback TCP round-trips in microseconds, which hides the real
+    internode link cost (the paper's IPoIB regime is ~O(100us-1ms)).
+    The sleep happens outside the pool lock and releases the GIL, so
+    concurrent callers (sibling actor loops) overlap their link waits
+    exactly as concurrent RPCs on a real fabric would.
     """
 
     regime = "internode"
 
-    def __init__(self, address: Tuple[str, int], pool_size: int = 4):
+    def __init__(self, address: Tuple[str, int], pool_size: int = 4,
+                 latency_s: float = 0.0):
         self._address = address
         self._pool_size = pool_size
+        self._latency_s = latency_s
         self._lock = threading.Lock()
         self._pool: list = [self._dial()]   # fail fast on a bad address
         self._closed = False
@@ -214,6 +224,8 @@ class SocketTransport(Transport):
             pass
 
     def call(self, method: str, payload: bytes) -> bytes:
+        if self._latency_s > 0.0:
+            time.sleep(self._latency_s)
         frame = _encode_frame(method, payload)
         sock, pooled = self._checkout()
         try:

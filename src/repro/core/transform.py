@@ -153,9 +153,12 @@ def update_metadata(graph: ResourceGraph, res: TransformResult,
     if not new:
         return res
     if jobid is not None:
+        graph.version += 1
         for path in res.new_paths:
             v = graph.vertex(path)
             v.allocations[jobid] = v.size
+            if graph._flat is not None:
+                graph._flat.on_flip(path, v)
 
     # Recompute aggregates bottom-up over the new subgraph only.
     # new_paths is in parent-before-child (DFS) order, so the reverse is

@@ -70,7 +70,7 @@ class FaultPolicy:
         for node in dead:
             g = self.runtime.scheduler.graph
             if node in g:
-                g.vertex(node).status = DOWN
+                g.set_status(node, DOWN)
             self.runtime.eject_and_replace(node)
             self.failures.append(node)
             self.monitor.last_seen.pop(node, None)

@@ -1,0 +1,219 @@
+"""FlatGraph mirror tests: incremental aggregates, match agreement.
+
+The flat-array mirror must track the dict graph exactly — same vertex
+set, free flags, and pruning aggregates — through any sequence of
+alloc/release flips, status flips, and structural splices, WITHOUT ever
+falling back to an ``init_aggregates()`` rebuild on a hot path
+(``ResourceGraph.n_agg_rebuilds`` stays frozen).  The dict DFS matcher
+stays the oracle: flat and dict matching must return identical paths.
+
+The property-based tests need ``hypothesis``; without it the
+deterministic tests below still collect and run (same guard idiom as
+tests/test_graph.py).
+"""
+import pytest
+
+from repro.core import (FlatMatcher, Jobspec, Matcher, ResourceGraph,
+                        Vertex, add_subgraph, build_cluster,
+                        remove_subgraph, update_metadata)
+from repro.core.graph import DOWN, UP
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAS_HYPOTHESIS = True
+except ImportError:      # optional dependency: property tests skipped
+    HAS_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------- #
+# deterministic basics
+# ---------------------------------------------------------------------- #
+def test_flat_mirror_agrees_after_build():
+    g = build_cluster(nodes=2, gpus_per_socket=2, mem_per_socket=4)
+    flat = g.flat()
+    assert flat.verify_against(g)
+    assert flat.n_builds == 1
+
+
+def test_flat_mirror_tracks_alloc_release_incrementally():
+    g = build_cluster(nodes=2)
+    flat = g.flat()
+    rebuilds = g.n_agg_rebuilds
+    cores = sorted(g.by_type("core"))[:8]
+    g.set_allocated(cores, "job-a")
+    assert flat.verify_against(g)
+    g.set_free(cores, "job-a")
+    assert flat.verify_against(g)
+    # the hot path never ran an init_aggregates() rebuild, and the
+    # mirror never re-built its arrays
+    assert g.n_agg_rebuilds == rebuilds
+    assert flat.n_builds == 1
+    assert flat.n_bubbles >= 2
+
+
+def test_flat_mirror_tracks_status_flips():
+    g = build_cluster(nodes=2)
+    flat = g.flat()
+    rebuilds = g.n_agg_rebuilds
+    node = sorted(g.by_type("node"))[0]
+    g.set_status(node, DOWN)
+    assert flat.verify_against(g)
+    assert g.validate_tree()
+    g.set_status(node, UP)
+    assert flat.verify_against(g)
+    assert g.n_agg_rebuilds == rebuilds
+
+
+def test_flat_mirror_tracks_splices():
+    g = build_cluster(nodes=2)
+    flat = g.flat()
+    ext = build_cluster(nodes=1, node_prefix="burst")
+    sub = ext.extract([p for p in ext.paths() if "burst" in p])
+    res = add_subgraph(g, sub)
+    update_metadata(g, res, jobid="burst-job")
+    assert flat.verify_against(g)
+    remove_subgraph(g, res.new_paths, jobid="burst-job")
+    assert flat.verify_against(g)
+
+
+def test_flat_and_dict_matchers_identical():
+    g = build_cluster(nodes=4, gpus_per_socket=2, mem_per_socket=4)
+    specs = [
+        Jobspec.hpc(nodes=2, sockets=4, cores=32),
+        Jobspec.hpc(nodes=1, sockets=2, cores=8, gpus=2),
+        Jobspec.hpc(nodes=8, sockets=16, cores=64),   # unsatisfiable
+    ]
+    for js in specs:
+        flat = Matcher(g, use_flat=True).match(js)
+        oracle = Matcher(g, use_flat=False).match(js)
+        assert flat == oracle
+
+
+def test_feasible_roots_empty_for_unknown_type():
+    g = build_cluster(nodes=2)
+    flat = g.flat()
+    req = Jobspec.hpc(nodes=1, sockets=1, cores=1).resources[0]
+    assert len(flat.feasible_roots(req)) > 0
+    from repro.core.jobspec import ResourceReq
+    missing = ResourceReq(type="quantum-annealer", count=1)
+    assert len(flat.feasible_roots(missing)) == 0
+
+
+def test_flat_match_claims_are_exclusive():
+    """Two requests in one jobspec must not claim the same vertex."""
+    g = build_cluster(nodes=2)
+    js = Jobspec.hpc(nodes=2, sockets=4, cores=16)
+    got = FlatMatcher(g.flat()).match(js)
+    assert got is not None
+    assert len(got) == len(set(got))
+
+
+def test_env_toggle_forces_dict_path(monkeypatch):
+    big = build_cluster(nodes=16)     # above FLAT_MIN_VERTICES
+    monkeypatch.setenv("CONVERGED_FLAT_MATCH", "0")
+    assert not Matcher(big).use_flat
+    monkeypatch.delenv("CONVERGED_FLAT_MATCH")
+    assert Matcher(big).use_flat
+    # small graphs default to the dict DFS (flat setup costs more than
+    # the whole match there); explicit use_flat=True still forces flat
+    small = build_cluster(nodes=2)
+    assert not Matcher(small).use_flat
+    assert Matcher(small, use_flat=True).use_flat
+
+
+def test_tombstone_compaction_rebuilds_once():
+    """Enough removals trigger one compacting rebuild, after which the
+    mirror still agrees exactly."""
+    g = build_cluster(nodes=8)
+    flat = g.flat()
+    for k in range(6):
+        remove_subgraph(g, [f"/cluster0/node{k}"])
+    assert flat.verify_against(g)
+    # add after heavy removal: may compact, must stay correct
+    ext = build_cluster(nodes=1, node_prefix="late")
+    sub = ext.extract([p for p in ext.paths() if "late" in p])
+    res = add_subgraph(g, sub)
+    update_metadata(g, res, jobid="late-job")
+    assert flat.verify_against(g)
+
+
+# ---------------------------------------------------------------------- #
+# property-based churn
+# ---------------------------------------------------------------------- #
+if HAS_HYPOTHESIS:
+    _op = st.one_of(
+        st.tuples(st.just("alloc"), st.integers(0, 63)),
+        st.tuples(st.just("free"), st.integers(0, 63)),
+        st.tuples(st.just("down"), st.integers(0, 3)),
+        st.tuples(st.just("up"), st.integers(0, 3)),
+        st.tuples(st.just("splice_in"), st.integers(0, 3)),
+        st.tuples(st.just("splice_out"), st.integers(0, 3)),
+    )
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(_op, min_size=1, max_size=40))
+    def test_flat_mirror_invariant_under_random_churn(ops):
+        """Property: after ANY alloc/release/status/splice sequence the
+        flat mirror agrees exactly with the dict graph, the tree stays
+        valid, and no hot-path operation fell back to a full
+        ``init_aggregates()`` rebuild."""
+        g = build_cluster(nodes=2, sockets_per_node=2, cores_per_socket=16)
+        flat = g.flat()
+        rebuilds = g.n_agg_rebuilds
+        cores = sorted(g.by_type("core"))
+        nodes = sorted(g.by_type("node")) * 2   # pad to 4 indices
+        spliced = {}
+        for kind, idx in ops:
+            if kind == "alloc":
+                g.set_allocated([cores[idx]], f"job{idx}")
+            elif kind == "free":
+                g.set_free([cores[idx]], f"job{idx}")
+            elif kind == "down":
+                g.set_status(nodes[idx], DOWN)
+            elif kind == "up":
+                g.set_status(nodes[idx], UP)
+            elif kind == "splice_in":
+                if idx in spliced:
+                    continue
+                ext = build_cluster(nodes=1, sockets_per_node=1,
+                                    cores_per_socket=4,
+                                    node_prefix=f"burst{idx}-")
+                sub = ext.extract(
+                    [p for p in ext.paths() if f"burst{idx}-" in p])
+                res = add_subgraph(g, sub)
+                update_metadata(g, res, jobid=f"bjob{idx}")
+                spliced[idx] = res.new_paths
+            elif kind == "splice_out":
+                paths = spliced.pop(idx, None)
+                if paths:
+                    remove_subgraph(g, paths, jobid=f"bjob{idx}")
+            assert g.validate_tree()
+            assert flat.verify_against(g)
+        assert g.n_agg_rebuilds == rebuilds, \
+            "a hot-path operation fell back to init_aggregates()"
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.tuples(st.booleans(), st.integers(0, 63)),
+                    min_size=0, max_size=30),
+           st.integers(1, 3), st.integers(1, 2), st.integers(2, 8))
+    def test_flat_and_dict_match_identical_after_churn(ops, nodes,
+                                                       sockets, cores):
+        """Property: after any alloc/free churn, the flat matcher and
+        the dict oracle return the SAME paths (or both None)."""
+        g = build_cluster(nodes=2, sockets_per_node=2, cores_per_socket=16)
+        g.flat()
+        pool = sorted(g.by_type("core"))
+        for alloc, idx in ops:
+            if alloc:
+                g.set_allocated([pool[idx]], f"j{idx}")
+            else:
+                g.set_free([pool[idx]], f"j{idx}")
+        js = Jobspec.hpc(nodes=nodes, sockets=sockets * nodes,
+                         cores=cores * sockets * nodes)
+        flat = Matcher(g, use_flat=True).match(js)
+        oracle = Matcher(g, use_flat=False).match(js)
+        assert flat == oracle
+else:
+    def test_property_tests_skipped_without_hypothesis():
+        pytest.skip("hypothesis not installed; property tests not defined")

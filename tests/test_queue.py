@@ -340,3 +340,76 @@ def test_shrink_rejects_invalid_count():
     assert q.shrink_job(job.jobid, count=1)
     assert len(job.paths) == n - 1
     assert q.scheduler.graph.validate_tree()
+
+
+def test_graph_version_bumps_on_match_relevant_mutations():
+    """Equal ``graph.version`` must guarantee equal match results: every
+    free-flip, status-flip, and structural edit bumps it; pure reads
+    and no-op mutations do not."""
+    q = _queue(nodes=2)
+    g = q.scheduler.graph
+    v0 = g.version
+    job = q.submit(NODE, walltime=5.0)
+    q.step()                            # alloc: free flips -> bump
+    assert job.state is JobState.RUNNING
+    v1 = g.version
+    assert v1 > v0
+    assert g.validate_tree() and g.version == v1     # reads: no bump
+    q.advance(5.0)                      # release: free flips -> bump
+    assert g.version > v1
+    v2 = g.version
+    g.set_status(g.roots[0], "down")
+    assert g.version > v2
+    g.set_status(g.roots[0], "up")
+    v3 = g.version
+    g.set_status(g.roots[0], "up")      # no-op status: no bump
+    assert g.version == v3
+
+
+def test_failed_match_memo_skips_and_invalidates():
+    """A job that failed to match is not re-matched until the graph
+    changes; a release (or an external kick()) re-arms it."""
+    q = _queue(nodes=1)
+    a = q.submit(NODE, walltime=10.0)
+    b = q.submit(NODE, walltime=10.0)
+    q.step()
+    assert a.state is JobState.RUNNING and b.state is JobState.PENDING
+    g = q.scheduler.graph
+    assert b.nogo_version == g.version   # memoized at current version
+    # idle re-steps do not clear the memo (graph unchanged)
+    q.kick()                             # kick clears it (contract:
+    assert b.nogo_version is None        # out-of-band Job mutation)
+    q.step()
+    assert b.state is JobState.PENDING   # still does not fit
+    assert b.nogo_version == g.version   # re-memoized
+    q.advance(10.0)                      # a completes -> version moves
+    assert b.state is JobState.RUNNING   # memo did not block the start
+    q.advance(10.0)
+    assert b.state is JobState.COMPLETED
+
+
+def test_easy_backfill_window_bounds_candidates():
+    """``EasyBackfill(max_candidates=k)`` examines at most k pending
+    jobs per pass; unbounded EASY backfills deeper."""
+    from repro.core import EasyBackfill
+
+    def run(max_candidates):
+        g = build_cluster(nodes=2)
+        sched = SchedulerInstance("w", g)
+        q = JobQueue(sched, clock=SimClock(), backfill=True,
+                     policy=EasyBackfill(max_candidates=max_candidates))
+        # head needs both nodes and must wait for the wide job; the
+        # singles behind it are backfill food
+        wide = q.submit(Jobspec.hpc(nodes=2, sockets=2, cores=32),
+                        walltime=5.0)
+        q.step()
+        assert wide.state is JobState.RUNNING
+        head = q.submit(Jobspec.hpc(nodes=2, sockets=2, cores=32),
+                        walltime=5.0, priority=9)
+        small = Jobspec.hpc(nodes=0, sockets=1, cores=4)
+        fillers = [q.submit(small, walltime=1.0) for _ in range(6)]
+        q.step()
+        assert head.state is JobState.PENDING
+        return sum(j.state is JobState.RUNNING for j in fillers)
+
+    assert run(max_candidates=None) > run(max_candidates=1) == 1
