@@ -11,6 +11,12 @@ the committed snapshot in ``experiments/bench/baseline/`` and fails
 * ``trace_replay.json`` — ``replay_wall_s`` per hierarchy depth: the
   end-to-end queue-churn replay.  Rows are only compared when the job
   counts match (quick and full runs replay different trace lengths).
+* ``rpc_roundtrip.json`` — ``persistent_p50`` per payload row: the
+  internode hop latency, legacy pooled and multiplexed rows alike
+  (lower is better).
+* ``api_events.json`` — ``events_per_s`` per (leg, events) row: event
+  bus throughput including the streaming ``push backlog (N subs)``
+  serving-tier legs (HIGHER is better — the guard is direction-aware).
 
 Improvements are reported but never fail.  A guarded metric missing
 from the current run fails loudly — silently dropping a row is how a
@@ -46,15 +52,37 @@ def _trace_keys(rows: List[Dict]) -> Dict[Tuple, float]:
             for r in rows if "depth" in r}
 
 
+def _rpc_keys(rows: List[Dict]) -> Dict[Tuple, float]:
+    return {(r["payload"],): r["persistent_p50"]
+            for r in rows if "persistent_p50" in r}
+
+
+def _api_events_keys(rows: List[Dict]) -> Dict[Tuple, float]:
+    # (leg, events) keying lets quick and full runs coexist: a leg
+    # sized differently falls into the shape-change skip below
+    return {(r["leg"], r["events"]): r["events_per_s"]
+            for r in rows if "events_per_s" in r}
+
+
+def _fmt(metric_is_rate: bool, v: float) -> str:
+    if metric_is_rate:
+        return f"{v / 1e3:.1f}k/s"
+    return f"{v * 1e3:.3f}ms"
+
+
 def compare(baseline_dir: Path, current_dir: Path,
             threshold: float) -> int:
+    # direction: "lower" = latency-style (bigger current/base ratio is
+    # a regression); "higher" = throughput-style (smaller is)
     checks = [
-        ("nested_mg.json", "L0 match_median", _nested_mg_keys),
-        ("trace_replay.json", "replay_wall_s", _trace_keys),
+        ("nested_mg.json", "L0 match_median", _nested_mg_keys, "lower"),
+        ("trace_replay.json", "replay_wall_s", _trace_keys, "lower"),
+        ("rpc_roundtrip.json", "persistent_p50", _rpc_keys, "lower"),
+        ("api_events.json", "events_per_s", _api_events_keys, "higher"),
     ]
     failures = 0
     compared = 0
-    for fname, metric, extract in checks:
+    for fname, metric, extract, direction in checks:
         base_p, cur_p = baseline_dir / fname, current_dir / fname
         if not base_p.exists():
             print(f"-- {fname}: no baseline snapshot, skipping")
@@ -65,7 +93,8 @@ def compare(baseline_dir: Path, current_dir: Path,
             failures += 1
             continue
         base, cur = extract(_load(base_p)), extract(_load(cur_p))
-        for key, b in sorted(base.items()):
+        rate = direction == "higher"
+        for key, b in sorted(base.items(), key=str):
             c = cur.get(key)
             if c is None:
                 # quick vs full runs legitimately differ in trace
@@ -79,14 +108,16 @@ def compare(baseline_dir: Path, current_dir: Path,
                 continue
             compared += 1
             ratio = c / b if b > 0 else float("inf")
+            # normalize so >1 always means "got worse"
+            worse = (b / c if c > 0 else float("inf")) if rate else ratio
             flag = "OK"
-            if ratio > 1.0 + threshold:
+            if worse > 1.0 + threshold:
                 flag = "REGRESSION"
                 failures += 1
-            elif ratio < 1.0 - threshold:
+            elif worse < 1.0 - threshold:
                 flag = "improved"
             print(f"   {fname} {key}: {metric} "
-                  f"{b * 1e3:.3f}ms -> {c * 1e3:.3f}ms "
+                  f"{_fmt(rate, b)} -> {_fmt(rate, c)} "
                   f"({ratio:.2f}x)  {flag}")
     if compared == 0 and failures == 0:
         print("-- nothing compared (no baseline snapshots found)")

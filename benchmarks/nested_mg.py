@@ -34,8 +34,11 @@ LEVELS = [(128, "L0"), (8, "L1"), (4, "L2"), (2, "L3"), (1, "L4")]
 def bench_rpc_roundtrip(repeat: int = 200) -> List[Dict]:
     """Persistent pooled connection vs dialing per call, per payload
     size — the delta the SocketTransport connection pool buys on every
-    internode hop (ROADMAP "connection pooling")."""
-    from repro.core.rpc import RPCServer, SocketTransport
+    internode hop (ROADMAP "connection pooling") — plus the
+    multiplexed transport rows: single calls and a 64-deep pipelined
+    batch sharing one connection/flush."""
+    from repro.core.rpc import (MuxServer, MuxTransport, RPCServer,
+                                SocketTransport)
 
     rows: List[Dict] = []
     srv = RPCServer(lambda m, p: p)
@@ -67,7 +70,33 @@ def bench_rpc_roundtrip(repeat: int = 200) -> List[Dict]:
             pooled.close()
     finally:
         srv.close()
-    print_table("RPC round-trip: pooled persistent vs dial-per-call",
+    # the multiplexed path: same echo workload, single vs pipelined
+    msrv = MuxServer(lambda m, p: p)
+    try:
+        mux = MuxTransport(msrv.address)
+        try:
+            for label, payload in (("64B", b"x" * 64),
+                                   ("64KiB", b"x" * 65536)):
+                single = timeit(
+                    lambda: mux.call("echo", payload), repeat=repeat)
+                batch = [("echo", payload)] * 64
+                piped = timeit(lambda: mux.call_many(batch),
+                               repeat=max(repeat // 8, 10))
+                rows.append({
+                    "payload": label + " mux",
+                    "persistent_mean": single["mean"],
+                    "persistent_p50": single["median"],
+                    "pipelined_percall_p50": piped["median"] / 64,
+                    # pipelining speedup: 64 sequential calls vs one
+                    # 64-deep batch on the same connection
+                    "speedup": (single["median"] * 64 / piped["median"]
+                                if piped["median"] > 0 else 0.0),
+                })
+        finally:
+            mux.close()
+    finally:
+        msrv.close()
+    print_table("RPC round-trip: pooled/dial, mux single/pipelined",
                 rows, ["payload", "persistent_mean", "dial_mean",
                        "speedup"])
     emit("rpc_roundtrip", rows)

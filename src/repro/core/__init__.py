@@ -15,12 +15,14 @@ from .policy import (POLICIES, ConservativeBackfill, EasyBackfill, FCFS,
                      FirstFit, PreemptivePriority, PriorityFCFS,
                      SchedulingPolicy, make_policy)
 from .events import EventLog, EventType, JobEvent
-from .api import Instance, JobHandle, RemoteInstance, RemoteJobHandle
+from .api import (Instance, JobHandle, RemoteInstance, RemoteJobHandle,
+                  RemoteSubscription)
 from .tenancy import FairShareArbiter, MultiTenantTree, TenantSpec
 from .external import (AWS_ZONES, TABLE3_CATALOG, ExternalProvider,
                        InstanceType, ProvisionResult, SimulatedEC2Provider,
                        TPUSliceProvider, fleet_catalog)
-from .rpc import MethodRegistry
+from .rpc import (ClientReactor, MethodRegistry, MuxServer, MuxTransport,
+                  ProtocolError, RPCError, RPCServer, SocketTransport)
 
 __all__ = [
     "CONTAINMENT", "ResourceGraph", "Vertex", "build_cluster",
@@ -31,9 +33,12 @@ __all__ = [
     "Allocation", "GrowEngine", "GrowResult", "Hierarchy", "MGTiming",
     "SchedulerInstance", "TreeSpec", "build_chain", "build_tree",
     "Clock", "Job", "JobQueue", "JobState", "QueueStats", "SimClock",
-    "WallClock", "MethodRegistry",
+    "WallClock", "MethodRegistry", "MuxServer", "MuxTransport",
+    "ClientReactor", "ProtocolError", "RPCError", "RPCServer",
+    "SocketTransport",
     "EventLog", "EventType", "JobEvent",
     "Instance", "JobHandle", "RemoteInstance", "RemoteJobHandle",
+    "RemoteSubscription",
     "POLICIES", "ConservativeBackfill", "EasyBackfill", "FCFS",
     "FirstFit", "PreemptivePriority", "PriorityFCFS", "SchedulingPolicy",
     "make_policy", "FairShareArbiter", "MultiTenantTree", "TenantSpec",

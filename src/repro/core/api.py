@@ -36,8 +36,9 @@ exposed for consumers that drive time explicitly.
 """
 from __future__ import annotations
 
+import threading
 import time as _time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from .events import EventLog, EventType, JobEvent
 from .external import ExternalProvider
@@ -170,7 +171,19 @@ class Instance:
         # list+wrap in running/pending) atomic.  Two Instances
         # wrapping one queue therefore share one lock.
         self._lock = self.queue._api_lock
+        # wall-clock waiters park on this condition and are woken by
+        # terminal events (FREE / EXCEPTION) instead of spinning on a
+        # fixed 2ms sleep; the timed wait below is only the fallback
+        self._wait_cond = threading.Condition()
+        self.events.subscribe(self._on_terminal_event)
         self._register_methods()
+        self._broadcaster = _EventStreamBroadcaster(self.events)
+        self.scheduler.register_stream("subscribe", self._broadcaster.open)
+
+    def _on_terminal_event(self, ev: JobEvent) -> None:
+        if ev.type is EventType.FREE or ev.type is EventType.EXCEPTION:
+            with self._wait_cond:
+                self._wait_cond.notify_all()
 
     # ------------------------------------------------------------------ #
     # the local surface
@@ -199,6 +212,27 @@ class Instance:
     def shrink(self, jobid: str, paths: Optional[List[str]] = None,
                count: Optional[int] = None) -> bool:
         return self.queue.shrink_job(jobid, paths=paths, count=count)
+
+    def submit_many(self, jobspecs: Iterable[Jobspec], *,
+                    walltime: Optional[float] = None, priority: int = 0,
+                    preemptible: bool = False,
+                    grow: Optional[bool] = None,
+                    alloc_id: Optional[str] = None,
+                    dispatch: bool = False) -> List[JobHandle]:
+        """Batched submit: one atomic enqueue of many jobs (and, for
+        :class:`RemoteInstance`, one round-trip instead of N)."""
+        with self._lock:
+            return [self.submit(js, walltime=walltime, priority=priority,
+                                preemptible=preemptible, grow=grow,
+                                alloc_id=alloc_id, dispatch=dispatch)
+                    for js in jobspecs]
+
+    def grow_many(self, grows: Iterable[Tuple[str, Jobspec]]
+                  ) -> List[bool]:
+        """Batched malleable grow: ``[(jobid, jobspec), ...]`` applied
+        in order; returns per-request success."""
+        with self._lock:
+            return [self.grow(jobid, js) for jobid, js in grows]
 
     def wait(self, jobid: str, timeout: Optional[float] = None
              ) -> Optional[JobState]:
@@ -234,7 +268,21 @@ class Instance:
                     break
                 if deadline is not None and _time.monotonic() > deadline:
                     break
-                _time.sleep(0.002)
+                # park until a terminal event wakes us (the notifier
+                # may hold the queue lock, so never step() while
+                # holding the condition); the timed wait is only the
+                # WallClock fallback for completions that happen with
+                # no event — e.g. a walltime expiring between steps
+                with self._wait_cond:
+                    if job.state in _TERMINAL:
+                        break
+                    remaining = (deadline - _time.monotonic()
+                                 if deadline is not None else None)
+                    if remaining is not None and remaining <= 0:
+                        break
+                    self._wait_cond.wait(
+                        timeout=min(0.05, remaining)
+                        if remaining is not None else 0.05)
         return job.state
 
     def job(self, jobid: str) -> Optional[Dict]:
@@ -305,6 +353,8 @@ class Instance:
     def _register_methods(self) -> None:
         reg = self.scheduler.register_method
         reg("submit", self._rpc_submit)
+        reg("submit_many", self._rpc_submit_many)
+        reg("grow_many", self._rpc_grow_many)
         reg("cancel", self._rpc_cancel)
         reg("wait", self._rpc_wait)
         reg("job", self._rpc_job)
@@ -334,6 +384,21 @@ class Instance:
                              reason=str(exc))
             return pack_json({"error": str(exc)})
         return pack_json({"jobid": h.jobid, "state": h.state.value})
+
+    def _rpc_submit_many(self, payload: bytes) -> bytes:
+        req = unpack_json(payload)
+        with self._lock:
+            out = [unpack_json(self._rpc_submit(pack_json(j)))
+                   for j in req.get("jobs", [])]
+        return pack_json({"jobs": out})
+
+    def _rpc_grow_many(self, payload: bytes) -> bytes:
+        req = unpack_json(payload)
+        with self._lock:
+            oks = [bool(self.grow(g["jobid"],
+                                  Jobspec.from_dict(g["jobspec"])))
+                   for g in req.get("grows", [])]
+        return pack_json({"ok": oks})
 
     def _rpc_cancel(self, payload: bytes) -> bytes:
         req = unpack_json(payload)
@@ -371,6 +436,118 @@ class Instance:
     def _rpc_advance(self, payload: bytes) -> bytes:
         req = unpack_json(payload)
         return pack_json({"started": self.advance(req.get("dt", 0.0))})
+
+
+# ---------------------------------------------------------------------- #
+# server-push event streaming
+# ---------------------------------------------------------------------- #
+def _encode_events(events: List[JobEvent]) -> bytes:
+    return pack_json({"events": [e.to_dict() for e in events]})
+
+
+class _EventStreamBroadcaster:
+    """Feeds the ``subscribe`` stream verb from the event log.
+
+    One batch sink on the :class:`EventLog` (attached lazily, detached
+    when the last subscriber leaves) fans each delivery chunk out to
+    every remote subscriber: the chunk is JSON-encoded *once* and the
+    same bytes object is enqueued on every connection — per-event cost
+    is independent of the subscriber count.
+
+    ``open`` (the stream verb) first replays the journal from the
+    requested cursor in 4096-event frames, then splices the stream into
+    live delivery with no gap and no duplicate: replay is capped at the
+    last seq the sink has delivered, and registration re-checks that
+    watermark under the lock, so an event is pushed by exactly one of
+    the two paths.  A cursor older than the journal's retained window
+    resumes from the oldest retained event — the same semantics as
+    ``events_since`` replay.
+    """
+
+    CHUNK = 4096
+
+    def __init__(self, events: EventLog):
+        self._events = events
+        self._block = threading.Lock()
+        self._streams: List[Dict] = []
+        self._unsub: Optional[Callable[[], None]] = None
+        self._delivered = 0     # seq just past the sink's last batch
+        # replay chunks are immutable once appended (seq identifies an
+        # event forever), so a fleet of subscribers replaying the same
+        # journal encodes each chunk once, not once per subscriber
+        self._replay_cache: Dict[Tuple[int, int], bytes] = {}
+
+    def open(self, payload: bytes, push: Callable[[int, bytes], None]
+             ) -> Tuple[bytes, Callable[[], None]]:
+        req = unpack_json(payload)
+        cursor = req.get("cursor")
+        with self._block:
+            if self._unsub is None:
+                # the sink's join cursor is the log cursor at attach,
+                # so everything at or past it arrives via _on_batch
+                self._delivered = self._events.cursor
+                self._unsub = self._events.add_sink(self._on_batch)
+            nxt = self._delivered if cursor is None else cursor
+        entry = {"push": push, "next": nxt, "open": True}
+        while True:
+            with self._block:
+                target = self._delivered
+                if entry["next"] >= target:
+                    self._streams.append(entry)
+                    ack = entry["next"]
+                    break
+            # catch up outside the lock (live delivery to existing
+            # subscribers keeps flowing while this one replays)
+            events, _ = self._events.since(entry["next"])
+            chunk = [e for e in events if e.seq < target]
+            if not chunk:
+                entry["next"] = target      # window truncated: skip
+                continue
+            for i in range(0, len(chunk), self.CHUNK):
+                part = chunk[i:i + self.CHUNK]
+                key = (part[0].seq, len(part))
+                enc = self._replay_cache.get(key)
+                if enc is None:
+                    enc = _encode_events(part)
+                    if len(self._replay_cache) >= 64:
+                        self._replay_cache.clear()
+                    self._replay_cache[key] = enc
+                push(len(part), enc)
+            entry["next"] = chunk[-1].seq + 1
+
+        def close() -> None:
+            with self._block:
+                entry["open"] = False
+                if entry in self._streams:
+                    self._streams.remove(entry)
+                if not self._streams and self._unsub is not None:
+                    self._unsub()
+                    self._unsub = None
+        return pack_json({"cursor": ack}), close
+
+    def _on_batch(self, events: List[JobEvent]) -> None:
+        with self._block:
+            self._delivered = events[-1].seq + 1
+            streams = list(self._streams)
+        if not streams:
+            return
+        shared = None
+        first = events[0].seq
+        for s in streams:
+            if not s["open"]:
+                continue
+            if s["next"] <= first:
+                if shared is None:
+                    shared = _encode_events(events)
+                s["push"](len(events), shared)
+                s["next"] = events[-1].seq + 1
+            else:
+                # a subscriber that just spliced in mid-chunk: slice
+                # off what its replay already covered
+                part = [e for e in events if e.seq >= s["next"]]
+                if part:
+                    s["push"](len(part), _encode_events(part))
+                    s["next"] = part[-1].seq + 1
 
 
 # ---------------------------------------------------------------------- #
@@ -438,6 +615,47 @@ class RemoteInstance:
             raise ValueError(f"remote submit failed: {resp['error']}")
         return RemoteJobHandle(self, resp["jobid"])
 
+    def submit_many(self, jobspecs: Iterable[Jobspec], *,
+                    walltime: Optional[float] = None, priority: int = 0,
+                    preemptible: bool = False,
+                    grow: Optional[bool] = None,
+                    alloc_id: Optional[str] = None,
+                    dispatch: bool = False) -> List[RemoteJobHandle]:
+        """Batched submit: the whole batch rides one RPC round-trip
+        (a deep queue pays one link latency, not N)."""
+        jobs = [{"jobspec": js.to_dict(), "walltime": walltime,
+                 "priority": priority, "preemptible": preemptible,
+                 "grow": grow, "alloc_id": alloc_id,
+                 "dispatch": dispatch} for js in jobspecs]
+        resp = self._call("submit_many", jobs=jobs)
+        handles = []
+        for r in resp.get("jobs", []):
+            if "error" in r:
+                raise ValueError(f"remote submit failed: {r['error']}")
+            handles.append(RemoteJobHandle(self, r["jobid"]))
+        return handles
+
+    def grow_many(self, grows: Iterable[Tuple[str, Jobspec]]
+                  ) -> List[bool]:
+        """Batched grow in one round-trip; per-request success."""
+        resp = self._call("grow_many",
+                          grows=[{"jobid": j, "jobspec": js.to_dict()}
+                                 for j, js in grows])
+        return [bool(ok) for ok in resp.get("ok", [])]
+
+    def subscribe(self, cb: Optional[Callable[[JobEvent], None]] = None,
+                  cursor: Optional[int] = None) -> "RemoteSubscription":
+        """Open a server-push event stream (requires a multiplexed
+        transport): ``cb`` receives each :class:`JobEvent` as it is
+        emitted — no ``events_since`` polling.  ``cursor`` replays the
+        journal from there first (``None`` = live only)."""
+        if not hasattr(self.transport, "subscribe"):
+            raise TypeError(
+                "push subscription needs a MuxTransport (got "
+                f"{type(self.transport).__name__}); use events_since "
+                "polling on legacy transports")
+        return RemoteSubscription(self.transport, cb, cursor)
+
     def cancel(self, jobid: str) -> bool:
         return bool(self._call("cancel", jobid=jobid).get("ok"))
 
@@ -467,6 +685,13 @@ class RemoteInstance:
     def usage(self) -> Dict[str, int]:
         return unpack_json(self.transport.call("usage", b""))
 
+    def call_many(self, calls: List[Tuple[str, Dict]]) -> List[Dict]:
+        """Pipelined batch of arbitrary verbs: ``[(method, request)]``
+        goes out in one write; responses return in order."""
+        raw = self.transport.call_many(
+            [(m, pack_json(req)) for m, req in calls])
+        return [unpack_json(r) for r in raw]
+
     def step(self) -> int:
         return self._call("step").get("started", 0)
 
@@ -475,3 +700,51 @@ class RemoteInstance:
 
     def close(self) -> None:
         self.transport.close()
+
+
+class RemoteSubscription:
+    """Client side of a remote event stream: decodes pushed frames
+    into :class:`JobEvent`\\ s, tracks a resume cursor, and dedups the
+    replay/live splice — so after a disconnect, ``reattach`` on a fresh
+    transport resumes from ``self.cursor`` with no gaps (within the
+    journal's retained window) and no duplicates."""
+
+    def __init__(self, transport, cb: Optional[Callable[[JobEvent],
+                                                        None]],
+                 cursor: Optional[int] = None):
+        self._cb = cb
+        self.cursor = 0 if cursor is None else cursor
+        self.events_received = 0
+        self._sub = None
+        self._attach(transport, cursor)
+
+    def _attach(self, transport, cursor: Optional[int]) -> None:
+        payload = pack_json({} if cursor is None else {"cursor": cursor})
+        self._sub = transport.subscribe(payload,
+                                        on_batch=self._on_batch)
+        ack = unpack_json(self._sub.ack)
+        self.cursor = max(self.cursor, ack.get("cursor", 0))
+
+    def _on_batch(self, count: int, payload: Optional[bytes]) -> None:
+        for d in unpack_json(payload).get("events", []):
+            ev = JobEvent.from_dict(d)
+            if ev.seq < self.cursor:
+                continue        # overlap from a reattach replay
+            self.cursor = ev.seq + 1
+            self.events_received += 1
+            if self._cb is not None:
+                try:
+                    self._cb(ev)
+                except Exception:
+                    pass
+
+    def reattach(self, transport) -> None:
+        """Resubscribe on a (new) transport, resuming from the cursor
+        — the reconnect path after a server restart."""
+        self.close()
+        self._attach(transport, self.cursor)
+
+    def close(self) -> None:
+        if self._sub is not None:
+            self._sub.close()
+            self._sub = None

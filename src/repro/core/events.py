@@ -114,6 +114,12 @@ class EventLog:
         # emitting operation's locks are held.
         self._delivery: Deque[JobEvent] = collections.deque()
         self._delivering = False
+        # batch sinks ride the same single-drainer path but receive a
+        # LIST of events per call — the server-push hook: one encode of
+        # a whole chunk fans out to every remote subscriber, instead of
+        # one callback (and one frame) per event
+        self._sinks: List[Tuple[Callable[[List[JobEvent]], None],
+                                int]] = []
 
     # ------------------------------------------------------------------ #
     def emit(self, type: EventType, jobid: str,
@@ -169,13 +175,27 @@ class EventLog:
                 if not self._delivery:
                     self._delivering = False
                     return
-                ev = self._delivery.popleft()
+                # batch sinks amortize per-delivery overhead: take up
+                # to 256 parked events in one chunk (bounded so a flood
+                # can't starve the replay lock)
+                chunk = [self._delivery.popleft()
+                         for _ in range(min(len(self._delivery), 256))]
                 subs = list(self._subscribers)
-            for cb, joined in subs:
-                if ev.seq < joined:
-                    continue    # predates this subscriber
+                sinks = list(self._sinks)
+            for ev in chunk:
+                for cb, joined in subs:
+                    if ev.seq < joined:
+                        continue    # predates this subscriber
+                    try:
+                        cb(ev)
+                    except Exception:
+                        pass
+            for scb, joined in sinks:
+                batch = [e for e in chunk if e.seq >= joined]
+                if not batch:
+                    continue
                 try:
-                    cb(ev)
+                    scb(batch)
                 except Exception:
                     pass
 
@@ -206,6 +226,24 @@ class EventLog:
                 if entry in self._subscribers:
                     self._subscribers.remove(entry)
         return unsubscribe
+
+    def add_sink(self, cb: Callable[[List[JobEvent]], None]
+                 ) -> Callable[[], None]:
+        """Register a *batch* sink: like ``subscribe`` but the callback
+        receives a list of consecutive events per delivery chunk (same
+        single-drainer ordering guarantees, same join-cursor semantics).
+        This is the server-push hook — a remote-streaming broadcaster
+        encodes each chunk once and fans the bytes out to every
+        subscriber connection.  Returns an unsubscribe function."""
+        with self._lock:
+            entry = (cb, self._next)
+            self._sinks.append(entry)
+
+        def remove() -> None:
+            with self._lock:
+                if entry in self._sinks:
+                    self._sinks.remove(entry)
+        return remove
 
     # ------------------------------------------------------------------ #
     def __len__(self) -> int:

@@ -40,8 +40,8 @@ from .external import ExternalProvider
 from .graph import ResourceGraph
 from .jobspec import Jobspec
 from .match import Matcher
-from .rpc import (InProcTransport, MethodRegistry, RPCServer, SocketTransport,
-                  Transport, pack_json, unpack_json)
+from .rpc import (InProcTransport, MethodRegistry, MuxServer, RPCServer,
+                  SocketTransport, Transport, pack_json, unpack_json)
 from .transform import TransformKind, TransformResult, remove_subgraph
 
 
@@ -71,7 +71,10 @@ class SchedulerInstance:
         self.children: Dict[str, Transport] = {}
         self.engine = GrowEngine(self)
         self._jobids = itertools.count()
-        self._server: Optional[RPCServer] = None
+        self._server: Optional[MuxServer] = None
+        # stream verbs (server-push subscriptions) survive a close()/
+        # re-serve() cycle: they are re-applied to the fresh MuxServer
+        self._stream_openers: Dict[str, Callable] = {}
         self.external_paths: Set[str] = set()   # E_i bookkeeping
         # vertices spliced in from above (parent/sibling grows): they
         # only exist here for a job's lifetime and are removed — not
@@ -113,10 +116,16 @@ class SchedulerInstance:
     # ------------------------------------------------------------------ #
     # serving (parent side)
     # ------------------------------------------------------------------ #
-    def serve(self) -> Tuple[str, int]:
-        """Expose this instance over a loopback socket ("internode")."""
+    def serve(self, backlog: int = 512, workers: int = 8
+              ) -> Tuple[str, int]:
+        """Expose this instance over a loopback socket ("internode").
+        The server is a :class:`MuxServer` — it speaks both the legacy
+        ``SocketTransport`` protocol and the multiplexed/push protocol
+        of ``MuxTransport`` on the same port."""
         if self._server is None:
-            self._server = RPCServer(self.rpc_handler)
+            self._server = MuxServer(self.rpc_handler, backlog=backlog,
+                                     workers=workers,
+                                     streams=self._stream_openers)
         return self._server.address
 
     def inproc_transport(self) -> InProcTransport:
@@ -139,6 +148,14 @@ class SchedulerInstance:
                         fn: Callable[[bytes], bytes]) -> None:
         """Extension point: expose an extra RPC method on this level."""
         self.methods.register(name, fn)
+
+    def register_stream(self, name: str, opener: Callable) -> None:
+        """Extension point: expose a server-push stream verb.
+        ``opener(payload, push) -> (ack_payload, close_fn)``; ``push``
+        enqueues EVENT frames on the subscriber's connection."""
+        self._stream_openers[name] = opener
+        if self._server is not None:
+            self._server.register_stream(name, opener)
 
     # -- registered RPC methods ---------------------------------------- #
     def _rpc_match_grow(self, payload: bytes) -> bytes:

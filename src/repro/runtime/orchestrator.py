@@ -27,9 +27,10 @@ it never touches ``JobQueue`` internals or the scheduler directly:
 """
 from __future__ import annotations
 
+import collections
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Union
+from typing import Deque, Dict, List, Optional, Union
 
 from ..core.api import Instance, JobHandle
 from ..core.events import EventType
@@ -76,7 +77,7 @@ class Orchestrator:
     """
 
     def __init__(self, api: Union[Instance, SchedulerInstance],
-                 queue: Optional[JobQueue] = None):
+                 queue: Optional[JobQueue] = None, follow: bool = True):
         if isinstance(api, Instance):
             self.api = api
         elif queue is not None:
@@ -86,11 +87,29 @@ class Orchestrator:
         self.scheduler = self.api.scheduler
         self.replica_sets: Dict[str, ReplicaSet] = {}
         self._replica_seq = itertools.count()
-        # event-journal cursor: revocations are observed by replaying
-        # PREEMPT events appended since the last reconcile, never by
-        # polling queue state
+        # event-journal cursor: revocations are observed from the
+        # event stream, never by polling queue state.  With
+        # ``follow=True`` (default) the orchestrator rides the push
+        # stream — PREEMPTs are buffered as they are emitted and each
+        # reconcile just drains the buffer; ``follow=False`` (or a
+        # detached follower) falls back to cursor replay, retaining
+        # the journal-truncation resync for the reconnect path.
         self._cursor = self.api.events.cursor
+        self._watermark = self._cursor     # seq just past newest pushed
+        self._pushed: Deque = collections.deque()   # buffered PREEMPTs
+        self._follow = follow
+        self._unsub = None
+        if follow:
+            self._unsub = self.api.subscribe(self._on_event)
         self._revoked: Dict[str, List[str]] = {}   # alloc_id -> jobids
+
+    def _on_event(self, ev) -> None:
+        # runs on the event log's single-drainer thread: buffer only,
+        # reconciliation stays on the reconcile() caller's thread
+        if ev.type is EventType.PREEMPT:
+            self._pushed.append(ev)
+        if ev.seq >= self._watermark:
+            self._watermark = ev.seq + 1
 
     @property
     def queue(self) -> JobQueue:
@@ -164,23 +183,57 @@ class Orchestrator:
         return applied
 
     # ------------------------------------------------------------ #
-    def _drain_events(self) -> None:
-        """Replay the journal since the last cursor, collecting which
-        replica-set allocations lost replicas to PREEMPT (hierarchy
-        revokes and policy preemptions look identical here).  Events
-        for allocations this orchestrator doesn't manage are skipped,
-        so a shared queue's unrelated churn can't grow state here.
+    def detach(self) -> None:
+        """Stop following the push stream (the disconnect half of the
+        reconnect story); observation falls back to cursor replay."""
+        if self._unsub is not None:
+            self._unsub()
+            self._unsub = None
 
-        Two safety valves: records for replica sets that were removed
-        are pruned (they would otherwise accumulate forever), and if
-        the bounded journal dropped events between our cursor and its
-        retained window (reconcile fell > maxlen events behind), the
-        replay can no longer be trusted to contain every PREEMPT — so
-        fall back to a full state resync: any of our replicas still
-        sitting requeued in the pending queue is treated as revoked."""
+    def reattach(self) -> None:
+        """Resume following after :meth:`detach`: resubscribe first,
+        then replay the gap from the saved cursor — the replay carries
+        the truncation resync, and ``_revoked``'s seen-lists make the
+        replay/push overlap idempotent."""
+        if self._follow and self._unsub is None:
+            self._unsub = self.api.subscribe(self._on_event)
+        self._replay_events()
+
+    def _drain_events(self) -> None:
+        """Collect which replica-set allocations lost replicas to
+        PREEMPT (hierarchy revokes and policy preemptions look
+        identical here).  Events for allocations this orchestrator
+        doesn't manage are skipped, so a shared queue's unrelated
+        churn can't grow state here.
+
+        Following the push stream, this just drains the buffer the
+        live subscription filled — no journal scan at all.  Otherwise
+        it replays the journal since the last cursor."""
         mine = {rs.jobid for rs in self.replica_sets.values()}
         for alloc in [a for a in self._revoked if a not in mine]:
             del self._revoked[alloc]
+        if self._unsub is not None:
+            while self._pushed:
+                ev = self._pushed.popleft()
+                alloc = ev.detail.get("alloc_id", ev.jobid)
+                if alloc in mine:
+                    seen = self._revoked.setdefault(alloc, [])
+                    if ev.jobid not in seen:
+                        seen.append(ev.jobid)
+            if self._watermark > self._cursor:
+                self._cursor = self._watermark
+            return
+        self._replay_events(mine)
+
+    def _replay_events(self, mine: Optional[set] = None) -> None:
+        """Cursor replay with the truncation safety valve: if the
+        bounded journal dropped events between our cursor and its
+        retained window (we fell > maxlen events behind), the replay
+        can no longer be trusted to contain every PREEMPT — so fall
+        back to a full state resync: any of our replicas still
+        sitting requeued in the pending queue is treated as revoked."""
+        if mine is None:
+            mine = {rs.jobid for rs in self.replica_sets.values()}
         cursor = self._cursor
         events, self._cursor = self.api.events_since(cursor)
         if events and events[0].seq > cursor:

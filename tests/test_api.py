@@ -73,6 +73,78 @@ def test_wait_on_wallclock_polls_to_completion():
     assert h.wait(timeout=5.0) is JobState.COMPLETED
 
 
+def test_wallclock_wait_wakes_on_terminal_event_not_spin():
+    """A cross-thread cancel must wake the waiter via the condition
+    variable — promptly, and without the old fixed-2ms stepping spin
+    (the step count stays far below what polling would rack up)."""
+    import time
+
+    inst = _instance(clock=WallClock())
+    # a job that can never start (cluster too small): the waiter parks
+    h = inst.submit(Jobspec.hpc(nodes=10, sockets=20, cores=320),
+                    walltime=60.0)
+    steps = []
+    orig_step = inst.queue.step
+    inst.queue.step = lambda: steps.append(1) or orig_step()
+
+    def cancel_later():
+        time.sleep(0.4)
+        h.cancel()
+
+    th = threading.Thread(target=cancel_later)
+    t0 = time.monotonic()
+    th.start()
+    state = h.wait(timeout=10.0)
+    elapsed = time.monotonic() - t0
+    th.join()
+    assert state is JobState.CANCELLED
+    assert elapsed < 2.0                    # woke promptly on FREE
+    # 2ms spin over 0.4s would step ~200 times; the condition-variable
+    # wait ticks at most every 50ms plus the wake itself
+    assert len(steps) < 30
+
+
+def test_submit_many_local_and_remote():
+    """Batched submit/grow: one lock hold locally, one round-trip
+    remotely, same handles as N singles."""
+    inst = _instance(nodes=2)
+    handles = inst.submit_many([SOCKET8] * 4, walltime=5.0)
+    assert len(handles) == 4
+    inst.step()
+    assert all(h.state is JobState.RUNNING for h in handles)
+    # remote, over the multiplexed transport
+    from repro.core import MuxTransport
+    served = _instance(nodes=2)
+    t = MuxTransport(served.serve())
+    remote = RemoteInstance(t)
+    try:
+        rh = remote.submit_many([SOCKET8] * 4, walltime=5.0)
+        assert len(rh) == 4
+        remote.step()
+        assert all(x.state is JobState.RUNNING for x in rh)
+        oks = remote.grow_many([(rh[0].jobid, SOCKET8)])
+        assert oks == [False]       # queue built without allow_grow
+        # pipelined generic batch: one write, ordered responses
+        infos = remote.call_many([("job", {"jobid": x.jobid})
+                                  for x in rh])
+        assert [i["job"]["jobid"] for i in infos] == \
+            [x.jobid for x in rh]
+    finally:
+        remote.close()
+        served.close()
+
+
+def test_grow_many_applies_in_order():
+    inst = _instance(nodes=2, allow_grow=True)
+    h = inst.submit(SOCKET8, walltime=5.0)
+    inst.step()
+    assert h.state is JobState.RUNNING
+    before = len(h.paths)
+    oks = inst.grow_many([(h.jobid, SOCKET8), (h.jobid, SOCKET8)])
+    assert oks == [True, True]
+    assert len(h.paths) > before
+
+
 def test_wait_returns_current_state_when_stuck():
     inst = _instance()
     h = inst.submit(Jobspec.hpc(nodes=10, sockets=20, cores=320),

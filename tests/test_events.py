@@ -311,3 +311,137 @@ def test_late_subscriber_skips_parked_events():
     assert got == []            # parked FREE predated the subscription
     log.emit(EventType.SUBMIT, "b")
     assert [e.jobid for e in got] == ["b"]
+
+
+# ---------------------------------------------------------------------- #
+# push-mode streaming: same sequences as cursor replay, over the wire
+# ---------------------------------------------------------------------- #
+def test_push_subscribers_see_exact_replay_sequences():
+    """Acceptance: a push-mode remote subscriber observes the exact
+    same per-job event sequences as ``events_since`` cursor replay —
+    across both the backlog (replayed) and live (streamed) phases."""
+    from repro.core import MuxTransport
+
+    served = _instance(nodes=2)
+    t = MuxTransport(served.serve())
+    remote = RemoteInstance(t)
+    try:
+        # backlog phase: drive some history before anyone subscribes
+        served.submit(NODE, walltime=5.0, jobid="job-a")
+        served.step()
+        got = []
+        sub = remote.subscribe(cb=got.append, cursor=0)
+        # live phase: more activity lands after the subscription
+        served.submit(NODE, walltime=8.0, jobid="job-b")
+        served.step()
+        served.advance(20.0)
+        replay, _ = served.events_since(0)
+        deadline = threading.Event()
+        for _ in range(200):                    # wait for the stream
+            if sub.events_received >= len(replay):
+                break
+            deadline.wait(0.02)
+        assert sub.events_received == len(replay)
+        assert [(e.seq, e.type, e.jobid) for e in got] == \
+            [(e.seq, e.type, e.jobid) for e in replay]
+        for jobid in {e.jobid for e in replay}:
+            assert [e.seq for e in got if e.jobid == jobid] == \
+                [e.seq for e in replay if e.jobid == jobid]
+        sub.close()
+    finally:
+        remote.close()
+        served.close()
+
+
+def test_push_subscriber_fleet_all_see_every_event():
+    """A fleet of concurrent subscribers on one shared reactor all
+    receive the full sequence (encode-once fan-out)."""
+    from repro.core import ClientReactor, MuxTransport
+
+    served = _instance(nodes=2)
+    addr = served.serve()
+    reactor = ClientReactor()
+    try:
+        transports = [MuxTransport(addr, reactor=reactor)
+                      for _ in range(32)]
+        subs = [RemoteInstance(t).subscribe(cursor=0)
+                for t in transports]
+        served.submit(NODE, walltime=5.0, jobid="job-a")
+        served.submit(NODE, walltime=8.0, jobid="job-b")
+        served.step()
+        served.advance(20.0)
+        total = len(served.events_since(0)[0])
+        ev = threading.Event()
+        for _ in range(300):
+            if all(s.events_received >= total for s in subs):
+                break
+            ev.wait(0.02)
+        assert [s.events_received for s in subs] == [total] * 32
+        assert all(s.cursor == total for s in subs)
+        for t in transports:
+            t.close()
+    finally:
+        reactor.close()
+        served.close()
+
+
+def test_server_restart_subscriber_reattach_no_gaps_no_dups():
+    """Satellite: after a server restart, a subscriber reattaches on a
+    fresh transport from its cursor and the merged stream equals the
+    ``events_since`` replay — no gaps, no duplicates."""
+    from repro.core import MuxTransport
+
+    served = _instance(nodes=2)
+    t1 = MuxTransport(served.serve())
+    got = []
+    sub = RemoteInstance(t1).subscribe(cb=got.append, cursor=0)
+    served.submit(NODE, walltime=5.0, jobid="job-a")
+    served.step()
+    ev = threading.Event()
+    for _ in range(200):
+        if sub.events_received >= len(served.events_since(0)[0]):
+            break
+        ev.wait(0.02)
+    cursor_before = sub.cursor
+    served.close()                       # server restarts
+    t1.close()
+    # events emitted while the subscriber is disconnected
+    served.submit(NODE, walltime=8.0, jobid="job-b")
+    served.step()
+    served.advance(20.0)
+    t2 = MuxTransport(served.serve())    # fresh port, same journal
+    try:
+        sub.reattach(t2)
+        assert sub.cursor >= cursor_before
+        replay, total = served.events_since(0)
+        for _ in range(300):
+            if sub.events_received >= len(replay):
+                break
+            ev.wait(0.02)
+        seqs = [e.seq for e in got]
+        assert seqs == sorted(set(seqs))            # no duplicates
+        assert seqs == [e.seq for e in replay]      # no gaps
+        sub.close()
+    finally:
+        t2.close()
+        served.close()
+
+
+def test_batch_sink_receives_every_event_in_order():
+    """The EventLog server-push hook: a batch sink sees the same total
+    order as a per-event subscriber, just chunked."""
+    log = EventLog()
+    singles, batches = [], []
+    log.subscribe(singles.append)
+    log.add_sink(batches.extend)
+    for i in range(600):
+        log.emit(EventType.SUBMIT, f"j{i}")
+    assert [e.seq for e in batches] == [e.seq for e in singles]
+    # join-cursor semantics: a late sink misses nothing it shouldn't
+    late = []
+    remove = log.add_sink(late.extend)
+    log.emit(EventType.FREE, "jX")
+    assert [e.jobid for e in late] == ["jX"]
+    remove()
+    log.emit(EventType.FREE, "jY")
+    assert [e.jobid for e in late] == ["jX"]

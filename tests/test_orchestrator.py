@@ -178,7 +178,9 @@ def test_revocation_survives_journal_truncation():
     q = JobQueue(sched, clock=clock, policy=PreemptivePriority(),
                  eventlog=EventLog(clock=clock, maxlen=16))
     inst = Instance(queue=q)
-    orch = Orchestrator(inst)
+    # follow=False forces cursor replay (the push stream would observe
+    # the PREEMPTs live and never need the truncation fallback)
+    orch = Orchestrator(inst, follow=False)
     rs = orch.create(ReplicaSet("web", POD, desired=3))
     assert rs.replicas == 3
     # a high-priority job preempts every (preemptible) replica; with
@@ -204,6 +206,64 @@ def test_revocation_survives_journal_truncation():
     orch.reconcile("web")
     assert rs.replicas == 3
     assert len(inst.running(rs.jobid)) == 3
+
+
+def test_push_mode_observes_revocation_without_replay():
+    """Following the push stream (default), PREEMPTs are buffered by
+    the live subscription and reconcile drains the buffer — the
+    journal is never scanned (verified against a journal too small to
+    retain the PREEMPTs)."""
+    from repro.core import (EventLog, Instance, JobQueue, JobState,
+                            PreemptivePriority, SchedulerInstance,
+                            SimClock)
+    g = build_cluster(nodes=1, sockets_per_node=2, cores_per_socket=8)
+    clock = SimClock()
+    q = JobQueue(SchedulerInstance("orch", g), clock=clock,
+                 policy=PreemptivePriority(),
+                 eventlog=EventLog(clock=clock, maxlen=16))
+    inst = Instance(queue=q)
+    orch = Orchestrator(inst)           # follow=True
+    rs = orch.create(ReplicaSet("web", POD, desired=3))
+    hi = inst.submit(Jobspec.hpc(nodes=1, sockets=2, cores=16),
+                     walltime=5.0, priority=9)
+    inst.step()
+    assert hi.state is JobState.RUNNING
+    # flood the journal so replay could NOT see the PREEMPTs; the
+    # live subscription already buffered them
+    for i in range(20):
+        inst.submit(POD, jobid=f"noise-{i}").cancel()
+    assert len(orch._pushed) >= 3
+    orch.reconcile("web")
+    assert rs.replicas == 0
+    assert inst.pending(rs.jobid) == []
+
+
+def test_detach_reattach_covers_the_gap():
+    """A detached follower misses live events; reattach replays the
+    gap from the saved cursor, and the seen-list dedup makes the
+    replay/push overlap idempotent."""
+    from repro.core import (Instance, JobState, PreemptivePriority,
+                            SchedulerInstance, SimClock, JobQueue)
+    g = build_cluster(nodes=1, sockets_per_node=2, cores_per_socket=8)
+    q = JobQueue(SchedulerInstance("orch", g), clock=SimClock(),
+                 policy=PreemptivePriority())
+    inst = Instance(queue=q)
+    orch = Orchestrator(inst)
+    rs = orch.create(ReplicaSet("web", POD, desired=3))
+    orch.detach()                       # "connection lost"
+    hi = inst.submit(Jobspec.hpc(nodes=1, sockets=2, cores=16),
+                     walltime=5.0, priority=9)
+    inst.step()
+    assert hi.state is JobState.RUNNING
+    assert len(orch._pushed) == 0       # nothing arrived while detached
+    orch.reattach()                     # replay covers the gap
+    orch.reconcile("web")
+    assert rs.replicas == 0
+    assert inst.pending(rs.jobid) == []
+    # stream is live again: new PREEMPTs arrive by push
+    inst.advance(5.0)
+    orch.reconcile("web")
+    assert rs.replicas == 3
 
 
 def test_revoked_records_pruned_for_removed_replica_sets():
