@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import json
 import statistics
-import sys
 import time
 from pathlib import Path
 from typing import Callable, Dict, List, Sequence

@@ -16,15 +16,13 @@ from __future__ import annotations
 
 import json
 import sys
-from pathlib import Path
 from typing import Dict, List
 
 import numpy as np
 
 from repro.core import Jobspec, ResourceReq, build_chain, build_cluster
 
-from .common import (OUT_DIR, cross_validate, emit, linreg, mape,
-                     print_table, r2)
+from .common import OUT_DIR, cross_validate, emit, linreg, mape, print_table
 from .nested_mg import LEVELS, build_hierarchy, run as run_nested
 
 

@@ -22,9 +22,9 @@ from __future__ import annotations
 import json
 import sys
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-from repro.configs.registry import ARCH_IDS, get_config, shapes_for
+from repro.configs.registry import get_config
 from repro.models.config import SHAPES, ArchConfig, ShapeConfig
 
 PEAK_FLOPS = 197e12          # bf16 / chip

@@ -14,7 +14,7 @@ import sys
 
 from repro.core import Jobspec, SchedulerInstance, build_cluster
 
-from .common import emit, print_table, summarize, timeit
+from .common import emit, print_table, summarize
 
 
 def run(repeat: int = 100) -> list:

@@ -2,8 +2,8 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (Jobspec, ResourceReq, SchedulerInstance,
-                        SimulatedEC2Provider, build_chain, build_cluster)
+from repro.core import (Jobspec, SchedulerInstance, SimulatedEC2Provider,
+                        build_chain, build_cluster)
 
 # ---------------------------------------------------------------- #
 # 1. RJMS dynamism: grow and shrink a running allocation

@@ -1,0 +1,18 @@
+"""Concurrency-correctness subsystem: static lint + runtime witness.
+
+See ``docs/CONCURRENCY.md`` for the invariants these two layers enforce.
+``lockwitness`` is imported by ``repro.core`` (lock construction goes
+through it), so it must stay stdlib-only; ``lint`` is only pulled in by
+``tools/check_invariants.py`` and the tests.
+"""
+from .lockwitness import (          # noqa: F401
+    REGISTRY,
+    LockOrderWitness,
+    activate,
+    active_witness,
+    deactivate,
+    named_lock,
+    named_rlock,
+    note_transport_call,
+    scoped_witness,
+)

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from importlib import import_module
-from typing import Dict, List
+from typing import List
 
 from ..models.config import ArchConfig, SHAPES, ShapeConfig
 

@@ -29,6 +29,7 @@ import threading
 from concurrent.futures import Future
 from typing import Callable, Dict, List, Optional
 
+from ..analysis import lockwitness
 from .queue import JobQueue, SimClock
 
 _STOP = object()
@@ -38,7 +39,16 @@ def check_actor_safe(queues: Dict[str, JobQueue]) -> None:
     """Refuse actor driving for queue sets that could deadlock AB-BA:
     more than one tenant with a preemptive policy means two queues can
     revoke each other's work from two threads at once.  Drive those
-    from a single thread (``MultiTenantTree.step``) instead."""
+    from a single thread (``MultiTenantTree.step``) instead.
+
+    With the lock-order witness active (``REPRO_LOCK_WITNESS=1``) the
+    policy-flag heuristic is backed by *observed* orders: if the
+    witness graph already contains API-lock edges in both directions
+    between any pair of this group's queues, the pair has demonstrably
+    revoked into each other and is refused even when the policy flags
+    would pass (e.g. a custom policy that preempts without setting
+    ``preemptive``).  See docs/CONCURRENCY.md.
+    """
     preemptive = [name for name, q in queues.items()
                   if getattr(q.policy, "preemptive", False)]
     if len(preemptive) > 1:
@@ -47,6 +57,20 @@ def check_actor_safe(queues: Dict[str, JobQueue]) -> None:
             f"({', '.join(sorted(preemptive))}): cross-revokes from two "
             "threads can deadlock AB-BA on the queue API locks; use the "
             "single-driver step or make preemption one-directional")
+    witness = lockwitness.active_witness()
+    if witness is None:
+        return
+    named = [(name, q._api_lock.witness_name) for name, q in queues.items()
+             if hasattr(q._api_lock, "witness_name")]
+    for i, (na, la) in enumerate(named):
+        for nb, lb in named[i + 1:]:
+            if witness.has_edge(la, lb) and witness.has_edge(lb, la):
+                raise ValueError(
+                    f"actor loops cannot drive tenants {na!r} and {nb!r}: "
+                    f"the lock-order witness has observed their API locks "
+                    f"taken in BOTH orders ({la} <-> {lb}), so stepping "
+                    "them from two threads can deadlock AB-BA; use the "
+                    "single-driver step")
 
 
 class QueueActor:

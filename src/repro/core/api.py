@@ -40,6 +40,7 @@ import threading
 import time as _time
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
+from ..analysis.lockwitness import named_lock
 from .events import EventLog, EventType, JobEvent
 from .external import ExternalProvider
 from .graph import ResourceGraph
@@ -468,7 +469,7 @@ class _EventStreamBroadcaster:
 
     def __init__(self, events: EventLog):
         self._events = events
-        self._block = threading.Lock()
+        self._block = named_lock("broadcaster")
         self._streams: List[Dict] = []
         self._unsub: Optional[Callable[[], None]] = None
         self._delivered = 0     # seq just past the sink's last batch

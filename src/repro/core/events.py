@@ -38,9 +38,10 @@ from __future__ import annotations
 
 import collections
 import enum
-import threading
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from ..analysis.lockwitness import named_rlock
 
 
 class EventType(enum.Enum):
@@ -94,7 +95,7 @@ class EventLog:
         self._events: List[JobEvent] = []
         self._base = 0                  # seq of _events[0]
         self._next = 0                  # next seq to assign
-        self._lock = threading.RLock()
+        self._lock = named_rlock("eventlog")
         # (callback, join cursor): a subscriber only receives events
         # with seq >= its join cursor, so a since()-then-subscribe
         # handoff never sees an event both via replay and live (a

@@ -26,10 +26,10 @@ from __future__ import annotations
 import itertools
 import random
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
-from .graph import CONTAINMENT, ResourceGraph, Vertex
+from .graph import ResourceGraph, Vertex
 from .jobspec import Jobspec, ResourceReq
 
 

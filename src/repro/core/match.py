@@ -15,7 +15,7 @@ asserts both return identical matches.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set
+from typing import List, Optional, Set
 
 from .graph import ResourceGraph, Vertex
 from .jobspec import Jobspec, ResourceReq

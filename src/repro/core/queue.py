@@ -1,5 +1,9 @@
 """Job lifecycle *mechanism* over the hierarchical scheduler.
 
+Threading contract: every public verb takes ``self._api_lock`` — the
+invariants (and the lint/witness machinery that enforces them) are
+documented in ``docs/CONCURRENCY.md``.
+
 This module is the mechanism half of the queue's mechanism/policy split
 ("Design Principles of Dynamic Resource Management ..."): it owns job
 state, time, and resource binding, and delegates every scheduling
@@ -57,11 +61,11 @@ from __future__ import annotations
 import bisect
 import enum
 import itertools
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from ..analysis.lockwitness import named_rlock
 from .events import EventLog, EventType
 from .jobspec import Jobspec
 from .policy import EasyBackfill, PriorityFCFS, SchedulingPolicy
@@ -225,7 +229,12 @@ class JobQueue:
         # preemptive tenants driven from two threads could deadlock
         # AB-BA; drive mutually preemptive trees from one thread (the
         # MultiTenantTree pattern) or make preemption one-directional.
-        self._api_lock = threading.RLock()
+        # allow_transport: this is the ONE lock deliberately held
+        # across transport calls (the escalation design) — see
+        # docs/CONCURRENCY.md.
+        self._api_lock = named_rlock(
+            f"jobqueue:{getattr(scheduler, 'name', 'q')}",
+            allow_transport=True)
         self._seq = itertools.count()
         self._by_id: Dict[str, Job] = {}
         # scheduling memo: a blocked head is not re-escalated through

@@ -44,6 +44,11 @@ the server tells the protocols apart):
 Both paths carry (method, payload-bytes) and return payload bytes, so
 the measured time is linear in the subgraph size n = |V|+|E|:
 ``t = n*beta + beta_0``.
+
+Threading contract: no lock in this module may be held across a socket
+send except the leaf ``_send_lock`` writer serialization — the rules,
+and the lint/witness machinery enforcing them, are documented in
+``docs/CONCURRENCY.md``.
 """
 from __future__ import annotations
 
@@ -56,6 +61,8 @@ import struct
 import threading
 import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+from ..analysis.lockwitness import named_lock, note_transport_call
 
 Handler = Callable[[str, bytes], bytes]
 
@@ -149,6 +156,7 @@ class InProcTransport(Transport):
     def call(self, method: str, payload: bytes) -> bytes:
         # Round-trip through a frame encode/decode so that serialization
         # cost matches the socket path's payload handling.
+        note_transport_call(method)
         frame = _encode_frame(method, payload)
         m, p = _decode_frame(frame)
         resp = self._handler(m, p)
@@ -223,7 +231,7 @@ class RPCServer:
         self._sock.listen(backlog)
         self.address: Tuple[str, int] = self._sock.getsockname()
         self._stop = threading.Event()
-        self._lock = threading.Lock()
+        self._lock = named_lock("rpcserver")
         self._sessions: Dict[int, Tuple[threading.Thread,
                                         socket.socket]] = {}
         self._session_seq = 0
@@ -315,7 +323,7 @@ class SocketTransport(Transport):
         self._pool_size = pool_size
         self._latency_s = latency_s
         self._max_frame = max_frame
-        self._lock = threading.Lock()
+        self._lock = named_lock("socktransport.pool")
         self._pool: list = [self._dial()]   # fail fast on a bad address
         self._closed = False
 
@@ -345,6 +353,7 @@ class SocketTransport(Transport):
             pass
 
     def call(self, method: str, payload: bytes) -> bytes:
+        note_transport_call(method)
         if self._latency_s > 0.0:
             time.sleep(self._latency_s)
         frame = _encode_frame(method, payload)
@@ -455,7 +464,7 @@ class MuxServer:
         self._max_frame = max_frame
         self._max_backlog = max_backlog
         self._streams = dict(streams or {})
-        self._lock = threading.Lock()
+        self._lock = named_lock("muxserver")
         self._conns: Dict[int, _Conn] = {}
         self._attention: List[_Conn] = []   # need write-enable or close
         self._stop = threading.Event()
@@ -652,27 +661,44 @@ class MuxServer:
             self._handle_body(conn, body)
 
     def _on_writable(self, conn: _Conn) -> None:
+        # The socket send must NOT happen under the server-global lock:
+        # a slow consumer draining its 1 MiB budget here would stall
+        # every handler thread queueing responses on *other*
+        # connections.  Take buffers off the deque under the lock, send
+        # with no lock held (only this loop thread writes a connection,
+        # so frame order is preserved), then put the unsent tail back
+        # at the head.
+        budget = 1 << 20
+        err = False
+        sent_total = 0
+        taken: List[bytes] = []
         with self._lock:
             out = conn.out
-            budget = 1 << 20
-            err = False
             while out and budget > 0:
-                head = out[0]
-                try:
-                    sent = conn.sock.send(head)
-                except (BlockingIOError, InterruptedError):
-                    break
-                except OSError:
-                    err = True
-                    break
-                conn.out_bytes -= sent
-                budget -= sent
-                if sent == len(head):
-                    out.popleft()
-                else:
-                    out[0] = head[sent:]
-                    break
-            if not out:
+                head = out.popleft()
+                taken.append(head)
+                budget -= len(head)
+        unsent: List[bytes] = []
+        for i, head in enumerate(taken):
+            try:
+                sent = conn.sock.send(head)
+            except (BlockingIOError, InterruptedError):
+                unsent = taken[i:]
+                break
+            except OSError:
+                err = True
+                break
+            sent_total += sent
+            if sent < len(head):
+                unsent = [head[sent:]] + taken[i + 1:]
+                break
+        with self._lock:
+            # handler threads may have appended while we were sending;
+            # the unsent tail goes back BEFORE anything they queued
+            for b in reversed(unsent):
+                conn.out.appendleft(b)
+            conn.out_bytes -= sent_total
+            if not conn.out:
                 conn.want_write = False
             done_writing = not conn.want_write
         if err:
@@ -873,8 +899,8 @@ class MuxTransport(Transport):
         self._max_frame = max_frame
         self._sock = socket.create_connection(address)
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        self._lock = threading.Lock()
-        self._send_lock = threading.Lock()
+        self._lock = named_lock("muxtransport")
+        self._send_lock = named_lock("muxtransport.send")
         self._next_id = 0
         self._calls: Dict[int, _Pending] = {}
         self._streams: Dict[int, Subscription] = {}
@@ -1017,6 +1043,7 @@ class MuxTransport(Transport):
             mv = memoryview(data)
             while mv:
                 try:
+                    # lint: allow(R2) _send_lock is a leaf writer lock; hoisting would interleave frames from concurrent pipelined callers
                     sent = self._sock.send(mv)
                 except (BlockingIOError, InterruptedError):
                     select.select([], [self._sock], [], 1.0)
@@ -1040,6 +1067,7 @@ class MuxTransport(Transport):
 
     # -- public API ------------------------------------------------------ #
     def call(self, method: str, payload: bytes) -> bytes:
+        note_transport_call(method)
         if self._latency_s > 0.0:
             time.sleep(self._latency_s)
         ((rid, pending),) = self._begin()
@@ -1055,6 +1083,7 @@ class MuxTransport(Transport):
         and one round-trip of latency for N calls, not N."""
         if not calls:
             return []
+        note_transport_call("call_many")
         if self._latency_s > 0.0:
             time.sleep(self._latency_s)
         ids = self._begin(len(calls))
@@ -1115,7 +1144,7 @@ class ClientReactor:
 
     def __init__(self):
         self._sel = selectors.DefaultSelector()
-        self._lock = threading.Lock()
+        self._lock = named_lock("clientreactor")
         self._wake_r, self._wake_w = socket.socketpair()
         self._wake_r.setblocking(False)
         self._wake_w.setblocking(False)

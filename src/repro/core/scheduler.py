@@ -30,17 +30,17 @@ Figures 1/3/4 and its analytical model (Section 6):
 from __future__ import annotations
 
 import itertools
-import threading
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+from ..analysis.lockwitness import named_rlock
 from .engine import Allocation, GrowEngine, GrowResult, MGTiming
 from .events import EventType
 from .external import ExternalProvider
 from .graph import ResourceGraph
 from .jobspec import Jobspec
 from .match import Matcher
-from .rpc import (InProcTransport, MethodRegistry, MuxServer, RPCServer,
+from .rpc import (InProcTransport, MethodRegistry, MuxServer,
                   SocketTransport, Transport, pack_json, unpack_json)
 from .transform import TransformKind, TransformResult, remove_subgraph
 
@@ -98,7 +98,7 @@ class SchedulerInstance:
         # — never held across a transport call (a parent routing to a
         # child while the child escalates to the parent would deadlock
         # otherwise).  RLock: revoke releases victims re-entrantly.
-        self.lock = threading.RLock()
+        self.lock = named_rlock(f"scheduler:{name}")
         # prewarm the flat-array mirror: schedulers are long-lived, so
         # the one-time build happens here (instance construction), not
         # inside the first match's timed region.  Small graphs stay on

@@ -15,7 +15,6 @@ compiles to real Mosaic.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

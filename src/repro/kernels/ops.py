@@ -6,13 +6,13 @@ run in interpret mode (CPU validation); ``'xla'`` forces the oracle.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention
-from .ref import ref_attention, ref_ssd
+from .ref import ref_attention
 from .ssd_scan import ssd_chunk_pallas
 
 

@@ -6,7 +6,7 @@ serve as ground truth for the kernel allclose sweeps in
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

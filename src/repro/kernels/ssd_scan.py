@@ -23,7 +23,6 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from .pallas_compat import CompilerParams as _CompilerParams
 

@@ -21,7 +21,6 @@ __doc__ = DOC
 import argparse
 import dataclasses
 import json
-import re
 import sys
 import time
 from pathlib import Path
@@ -31,8 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.registry import ARCH_IDS, get_config, shapes_for
-from ..models.config import SHAPES, ArchConfig, ShapeConfig
-from ..models.model import Model, make_model
+from ..models.config import SHAPES, ArchConfig
+from ..models.model import make_model
 from ..parallel.sharding import Rules, ShardingCtx
 from .hloparse import analyze
 from .mesh import make_production_mesh

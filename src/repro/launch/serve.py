@@ -11,7 +11,6 @@ streams decode steps, reusing the cache buffers (donated).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

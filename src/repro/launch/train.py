@@ -15,14 +15,13 @@ import time
 from typing import Optional
 
 import jax
-import numpy as np
 
 from ..configs.registry import ARCH_IDS, get_config
 from ..core.graph import build_tpu_fleet
 from ..core.external import TPUSliceProvider
 from ..core.scheduler import SchedulerInstance
 from ..data.pipeline import DataConfig, SyntheticTokenPipeline
-from ..models.config import ShapeConfig, smoke_shape
+from ..models.config import ShapeConfig
 from ..optim.adamw import OptConfig
 from ..runtime.checkpoint import CheckpointManager
 from ..runtime.elastic import ElasticRuntime

@@ -11,7 +11,6 @@ enabled with ``use_pallas=True`` on real TPU runtimes).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 

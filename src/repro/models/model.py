@@ -6,10 +6,8 @@ can jit them with explicit shardings (and re-jit after elastic resize).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +16,7 @@ from ..optim.adamw import (OptConfig, OptState, apply_updates,
                            init_opt_state, opt_state_specs)
 from ..parallel.sharding import ShardingCtx
 from .config import ArchConfig, ShapeConfig
-from .layers import (ParamSpec, cross_entropy, materialize_tree,
-                     tree_shapes, tree_shardings)
+from .layers import materialize_tree, tree_shapes, tree_shardings
 from .transformer import (cache_shardings, decode_step, forward,
                           init_cache_specs, init_specs, loss_fn)
 

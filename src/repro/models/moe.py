@@ -18,7 +18,7 @@ tests and as a fallback for tiny smoke configs.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

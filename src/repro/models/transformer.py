@@ -18,7 +18,6 @@ program as 28-layer llama3.2).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -27,10 +26,9 @@ import numpy as np
 
 from ..parallel.sharding import ShardingCtx, constrain
 from .config import ArchConfig
-from .layers import (ParamSpec, attention, attn_specs, cross_entropy,
-                     embed_specs, embed_tokens, lm_logits, mlp, mlp_specs,
-                     rmsnorm, stack_specs)
-from .mamba2 import (CONV_K, mamba_layer, mamba_specs, mamba_state_specs)
+from .layers import (attention, attn_specs, cross_entropy, embed_specs,
+                     embed_tokens, lm_logits, mlp, mlp_specs, stack_specs)
+from .mamba2 import mamba_layer, mamba_specs, mamba_state_specs
 from .moe import moe, moe_specs
 
 

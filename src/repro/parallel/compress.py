@@ -11,7 +11,6 @@ Off by default; enabled per-run and benchmarked in EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

@@ -22,7 +22,7 @@ Hillclimbing swaps rules per-arch via ``Rules.override``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple, Union
 
 import jax

@@ -27,14 +27,12 @@ NamedShardings (topology-independent layout keyed by logical axes).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Union
 
 import jax
-import numpy as np
 
 from ..core.api import Instance, JobHandle
-from ..core.graph import ResourceGraph
 from ..core.jobspec import Jobspec
 from ..core.scheduler import SchedulerInstance
 from ..models.config import ArchConfig, ShapeConfig

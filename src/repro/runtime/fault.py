@@ -12,7 +12,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-from ..core.graph import DOWN, ResourceGraph
+from ..core.graph import DOWN
 from .elastic import ElasticRuntime
 
 

@@ -32,7 +32,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Union
 
-from ..core.api import Instance, JobHandle
+from ..core.api import Instance
 from ..core.events import EventType
 from ..core.jobspec import Jobspec
 from ..core.queue import JobQueue, JobState

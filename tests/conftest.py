@@ -9,7 +9,31 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax
 import pytest
 
+from repro.analysis import lockwitness
+
 
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.key(0)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """Under REPRO_LOCK_WITNESS=1, dump the observed lock-order graph
+    and fail the run on any fatal (multi-thread) cycle or on a
+    transport call made while holding a non-exempt lock."""
+    witness = lockwitness.active_witness()
+    if witness is None:
+        return
+    out = os.environ.get("REPRO_LOCK_WITNESS_OUT", "lock_order_graph.json")
+    snap = witness.dump(out)
+    tr = session.config.pluginmanager.get_plugin("terminalreporter")
+    if tr is not None:
+        tr.write_line(f"lock-order witness: {len(snap['edges'])} edges, "
+                      f"{len(snap['cycles'])} cycle(s) "
+                      f"({len(snap['fatal_cycles'])} fatal), "
+                      f"{len(snap['transport_violations'])} transport "
+                      f"violation(s) -> {out}")
+    if snap["fatal_cycles"] or snap["transport_violations"]:
+        if tr is not None:
+            tr.write_line(witness.report())
+        session.exitstatus = 3

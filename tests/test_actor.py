@@ -8,8 +8,8 @@ are valid schedules); completion counts may not.
 """
 import pytest
 
-from repro.core import (ActorGroup, Jobspec, QueueActor, SimClock,
-                        build_cluster, check_actor_safe, make_policy)
+from repro.core import (Jobspec, QueueActor, SimClock, build_cluster,
+                        check_actor_safe, make_policy)
 from repro.core.tenancy import MultiTenantTree, TenantSpec
 
 

@@ -3,7 +3,6 @@ subscription, the PREEMPT requeue sequence, and events riding
 ``SocketTransport`` unchanged."""
 import threading
 
-import pytest
 
 from repro.core import (EventLog, EventType, Instance, JobEvent, JobState,
                         Jobspec, MultiTenantTree, PreemptivePriority,

@@ -13,9 +13,8 @@ tests/test_graph.py).
 """
 import pytest
 
-from repro.core import (FlatMatcher, Jobspec, Matcher, ResourceGraph,
-                        Vertex, add_subgraph, build_cluster,
-                        remove_subgraph, update_metadata)
+from repro.core import (FlatMatcher, Jobspec, Matcher, add_subgraph,
+                        build_cluster, remove_subgraph, update_metadata)
 from repro.core.graph import DOWN, UP
 
 try:

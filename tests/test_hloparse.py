@@ -1,6 +1,5 @@
 """Unit tests for the loop-aware HLO analyzer (drives the roofline)."""
-from repro.launch.hloparse import (Tally, analyze, parse_computations,
-                                   shape_bytes, shape_elems)
+from repro.launch.hloparse import (analyze, parse_computations, shape_bytes, shape_elems)
 
 SYNTHETIC_HLO = """\
 HloModule jit_step

@@ -1,5 +1,4 @@
 """MoE dispatch-vs-dense-oracle equivalence and routing properties."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Optimizer tests: AdamW / Adafactor convergence + spec-tree mirrors."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.optim.adamw import (OptConfig, apply_updates, init_opt_state,

@@ -1,5 +1,4 @@
 """Orchestrator (capability 3) tests: reconcile, burst policy, autoscale."""
-import pytest
 
 from repro.core import (Jobspec, ResourceReq, SchedulerInstance,
                         SimulatedEC2Provider, build_cluster)

@@ -1,6 +1,5 @@
 """RPC transport tests (two regimes + the multiplexed path)."""
 import socket
-import struct
 import threading
 import time
 

@@ -1,9 +1,8 @@
 """Scheduler tests: MA / MG (Algorithm 1), shrink, hierarchy, external."""
-import pytest
 
 from repro.core import (Jobspec, ResourceReq, SchedulerInstance,
                         SimulatedEC2Provider, TPUSliceProvider, build_chain,
-                        build_cluster, build_tpu_fleet)
+                        build_cluster)
 
 
 def _levels(paper=True):

@@ -1,9 +1,7 @@
 """End-to-end system behaviour tests (the paper's three capabilities)."""
-import pytest
 
 from repro.core import (Jobspec, ResourceReq, SchedulerInstance,
-                        SimulatedEC2Provider, build_chain, build_cluster,
-                        build_tpu_fleet)
+                        SimulatedEC2Provider, build_chain, build_cluster)
 
 
 def test_capability_1_rjms_dynamism():

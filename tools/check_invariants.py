@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""CLI for the concurrency lint (rules R1-R5, see docs/CONCURRENCY.md).
+
+Usage::
+
+    python tools/check_invariants.py                 # lint core + runtime
+    python tools/check_invariants.py src/repro/core  # explicit paths
+    python tools/check_invariants.py --json          # machine-readable
+    python tools/check_invariants.py --list-rules
+
+Exit status 0 when clean, 1 when any finding survives its pragma check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis import lint  # noqa: E402
+
+DEFAULT_PATHS = [
+    os.path.join(_ROOT, "src", "repro", "core"),
+    os.path.join(_ROOT, "src", "repro", "runtime"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories (default: core + runtime)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as a JSON array")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(lint.RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+
+    paths = args.paths or DEFAULT_PATHS
+    findings = lint.lint_paths(paths)
+    if args.json:
+        print(json.dumps([{
+            "path": os.path.relpath(f.path, _ROOT)
+            if f.path.startswith(_ROOT) else f.path,
+            "line": f.line, "rule": f.rule, "message": f.message,
+        } for f in findings], indent=2))
+    else:
+        for f in findings:
+            path = os.path.relpath(f.path, _ROOT) \
+                if f.path.startswith(_ROOT) else f.path
+            print(f"{path}:{f.line}: {f.rule} {f.message}")
+        if findings:
+            print(f"\n{len(findings)} finding(s). See docs/CONCURRENCY.md "
+                  f"for the invariants and the pragma escape hatch.")
+        else:
+            print("concurrency invariants: clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
