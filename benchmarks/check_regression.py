@@ -17,6 +17,13 @@ the committed snapshot in ``experiments/bench/baseline/`` and fails
 * ``api_events.json`` — ``events_per_s`` per (leg, events) row: event
   bus throughput including the streaming ``push backlog (N subs)``
   serving-tier legs (HIGHER is better — the guard is direction-aware).
+* ``batch_prefilter.json`` — batched-vs-sequential ``speedup`` per
+  window depth: the one-scan backfill prefilter's advantage (higher is
+  better; losing it silently re-opens the O(N) sequential scan).
+* ``trace_throughput.json`` — ``jobs_per_s`` per (window, jobs)
+  summary row of the scale replay, windowed AND exact-EASY rows alike
+  (higher is better) — the exact row guards the reservation-ledger
+  plane specifically.
 
 Improvements are reported but never fail.  A guarded metric missing
 from the current run fails loudly — silently dropping a row is how a
@@ -64,10 +71,30 @@ def _api_events_keys(rows: List[Dict]) -> Dict[Tuple, float]:
             for r in rows if "events_per_s" in r}
 
 
-def _fmt(metric_is_rate: bool, v: float) -> str:
-    if metric_is_rate:
-        return f"{v / 1e3:.1f}k/s"
-    return f"{v * 1e3:.3f}ms"
+def _prefilter_keys(rows: List[Dict]) -> Dict[Tuple, float]:
+    return {(r["depth"],): r["speedup"]
+            for r in rows if "speedup" in r}
+
+
+def _scale_keys(rows: List[Dict]) -> Dict[Tuple, float]:
+    # quick and weekly runs replay different trace lengths; keying by
+    # (window, jobs) routes a size mismatch into the shape-change skip
+    return {(r["window"], r["jobs"]): r["jobs_per_s"]
+            for r in rows if r.get("kind") == "summary"}
+
+
+# per-metric display units: latencies in ms, event rates in k/s,
+# unitless ratios and job rates as plain numbers
+_UNITS = {
+    "ms": lambda v: f"{v * 1e3:.3f}ms",
+    "k/s": lambda v: f"{v / 1e3:.1f}k/s",
+    "x": lambda v: f"{v:.2f}x",
+    "/s": lambda v: f"{v:.1f}/s",
+}
+
+
+def _fmt(unit: str, v: float) -> str:
+    return _UNITS[unit](v)
 
 
 def compare(baseline_dir: Path, current_dir: Path,
@@ -75,14 +102,22 @@ def compare(baseline_dir: Path, current_dir: Path,
     # direction: "lower" = latency-style (bigger current/base ratio is
     # a regression); "higher" = throughput-style (smaller is)
     checks = [
-        ("nested_mg.json", "L0 match_median", _nested_mg_keys, "lower"),
-        ("trace_replay.json", "replay_wall_s", _trace_keys, "lower"),
-        ("rpc_roundtrip.json", "persistent_p50", _rpc_keys, "lower"),
-        ("api_events.json", "events_per_s", _api_events_keys, "higher"),
+        ("nested_mg.json", "L0 match_median", _nested_mg_keys,
+         "lower", "ms"),
+        ("trace_replay.json", "replay_wall_s", _trace_keys,
+         "lower", "ms"),
+        ("rpc_roundtrip.json", "persistent_p50", _rpc_keys,
+         "lower", "ms"),
+        ("api_events.json", "events_per_s", _api_events_keys,
+         "higher", "k/s"),
+        ("batch_prefilter.json", "speedup", _prefilter_keys,
+         "higher", "x"),
+        ("trace_throughput.json", "jobs_per_s", _scale_keys,
+         "higher", "/s"),
     ]
     failures = 0
     compared = 0
-    for fname, metric, extract, direction in checks:
+    for fname, metric, extract, direction, unit in checks:
         base_p, cur_p = baseline_dir / fname, current_dir / fname
         if not base_p.exists():
             print(f"-- {fname}: no baseline snapshot, skipping")
@@ -117,7 +152,7 @@ def compare(baseline_dir: Path, current_dir: Path,
             elif worse < 1.0 - threshold:
                 flag = "improved"
             print(f"   {fname} {key}: {metric} "
-                  f"{_fmt(rate, b)} -> {_fmt(rate, c)} "
+                  f"{_fmt(unit, b)} -> {_fmt(unit, c)} "
                   f"({ratio:.2f}x)  {flag}")
     if compared == 0 and failures == 0:
         print("-- nothing compared (no baseline snapshots found)")

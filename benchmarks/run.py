@@ -55,6 +55,16 @@ def main() -> int:
     trace_replay.run_policies(n_jobs=120 if args.quick else 300)
 
     print("#" * 72)
+    print("# batched prefilter — one-scan vs N sequential feasibility")
+    from . import batch_prefilter
+    batch_prefilter.run(quick=args.quick)
+
+    print("#" * 72)
+    print("# scale replay — windowed vs exact-EASY on one overloaded "
+          "trace")
+    trace_replay.run_scale_compare(n_jobs=2_000 if args.quick else 10_000)
+
+    print("#" * 72)
     print("# Instance API — events/sec through the bus "
           "(in-proc vs socket)")
     from . import api_events

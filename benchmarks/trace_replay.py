@@ -82,14 +82,17 @@ def build_depth(depth: int) -> Hierarchy:
     return h
 
 
-def make_trace(n_jobs: int, seed: int = 0) -> List[Dict]:
-    """Synthetic trace: arrival gaps ~exp(1/2s), walltimes 5-60s,
-    request sizes skewed small (backfill food) with occasional wide
-    jobs that force queueing."""
+def iter_trace(n_jobs: int, seed: int = 0):
+    """Streaming variant of :func:`make_trace`: yields trace entries one
+    at a time and interns the handful of distinct request shapes in a
+    shared jobspec cache, so a 1M-job replay holds O(1) trace state
+    instead of a million dict+Jobspec pairs.  Jobspecs are read-only
+    through submit, so sharing one object across jobs is safe (the
+    policy tests reuse module-level specs the same way)."""
     rng = random.Random(seed)
+    specs: Dict[tuple, Jobspec] = {}
     t = 0.0
-    trace = []
-    for i in range(n_jobs):
+    for _ in range(n_jobs):
         t += rng.expovariate(0.5)
         wide = rng.random() < 0.15
         if wide:
@@ -98,14 +101,24 @@ def make_trace(n_jobs: int, seed: int = 0) -> List[Dict]:
             nodes = 1
             sockets = rng.choice([1, 2])
             cores = sockets * rng.choice([4, 8, 16])  # <=16 per socket
-        trace.append({
+        key = (nodes, sockets, cores)
+        spec = specs.get(key)
+        if spec is None:
+            spec = specs[key] = Jobspec.hpc(nodes=nodes, sockets=sockets,
+                                            cores=cores)
+        yield {
             "arrival": t,
-            "jobspec": Jobspec.hpc(nodes=nodes, sockets=sockets,
-                                   cores=cores),
+            "jobspec": spec,
             "walltime": rng.uniform(5.0, 60.0),
             "priority": 1 if wide else 0,
-        })
-    return trace
+        }
+
+
+def make_trace(n_jobs: int, seed: int = 0) -> List[Dict]:
+    """Synthetic trace: arrival gaps ~exp(1/2s), walltimes 5-60s,
+    request sizes skewed small (backfill food) with occasional wide
+    jobs that force queueing."""
+    return list(iter_trace(n_jobs, seed=seed))
 
 
 def replay(depth: int, trace: List[Dict]) -> Dict:
@@ -283,19 +296,29 @@ def _bucket(depth: int) -> str:
 
 
 def replay_scale(n_jobs: int, seed: int = 0, nodes: int = 16,
-                 segments: int = 10) -> List[Dict]:
+                 segments: int = 10, window: int = 64,
+                 emit_name: str = "trace_throughput") -> List[Dict]:
     """One instance, one long trace; emits the throughput curves the
     weekly lane tracks: match-time percentiles per queue-depth bucket
     (does the matcher degrade as the backlog builds?) and jobs/s +
-    MG/s per trace segment (does throughput hold over 100k jobs?)."""
-    trace = make_trace(n_jobs, seed=seed)
+    MG/s per trace segment (does throughput hold over 100k+ jobs?).
+
+    ``window`` is the EASY backfill window (the Slurm ``bf_max_job_test``
+    analogue); ``window=None`` runs *exact* unbounded EASY — affordable
+    now that the batched root prefilter turns the per-pass backlog scan
+    into cached int compares and the reservation ledger turns shadow /
+    delays estimates into binary searches.  Every row carries a
+    ``window`` discriminator ("exact" or the bound) so compare runs can
+    share one artifact.  ``emit_name=None`` skips artifact emission
+    (compare mode combines rows itself)."""
+    wlabel = "exact" if window is None else window
     g = build_cluster(nodes=nodes)
     clock = SimClock()
     # the trace is deliberately overloaded (~17% past capacity), so the
-    # backlog grows without bound; a bounded EASY backfill window keeps
-    # per-kick match work O(window) instead of O(backlog) — without it
-    # total MG attempts go quadratic and 100k jobs never finishes
-    policy = EasyBackfill(max_candidates=64)
+    # backlog grows without bound; the bounded window keeps per-kick
+    # match work O(window), while the exact mode leans on the batched
+    # prefilter + ledger to keep the O(backlog) scan at int-compare cost
+    policy = EasyBackfill(max_candidates=window)
     inst = Instance(graph=g, name="scale", clock=clock, allow_grow=True,
                     policy=policy)
     sched = inst.scheduler
@@ -307,7 +330,7 @@ def replay_scale(n_jobs: int, seed: int = 0, nodes: int = 16,
     seg_t = t0
     seg_mg = 0
     n_mg = 0
-    for i, entry in enumerate(trace):
+    for i, entry in enumerate(iter_trace(n_jobs, seed=seed)):
         inst.advance(max(entry["arrival"] - clock.now(), 0.0))
         inst.submit(entry["jobspec"], walltime=entry["walltime"],
                     priority=entry["priority"])
@@ -325,13 +348,17 @@ def replay_scale(n_jobs: int, seed: int = 0, nodes: int = 16,
             now = time.perf_counter()
             seg_rows.append({
                 "kind": "segment",
+                "window": wlabel,
                 "jobs_done": i + 1,
                 "wall_s": now - seg_t,
                 "jobs_per_s": seg_len / max(now - seg_t, 1e-12),
                 "mg_per_s": (n_mg - seg_mg) / max(now - seg_t, 1e-12),
             })
             seg_t, seg_mg = now, n_mg
-    inst.drain()
+    # the overloaded trace leaves an O(n_jobs) backlog at submit-end;
+    # the queue's default drain bound (100k events) is sized for the
+    # 100k lane, so scale it with the trace
+    q.drain(max_events=max(100_000, 4 * n_jobs))
     n_mg += len(sched.timings)
     wall = time.perf_counter() - t0
     s = inst.stats()
@@ -340,6 +367,7 @@ def replay_scale(n_jobs: int, seed: int = 0, nodes: int = 16,
     assert g.validate_tree()
     rows: List[Dict] = [{
         "kind": "summary",
+        "window": wlabel,
         "jobs": s.submitted,
         "completed": s.completed,
         "n_mg": n_mg,
@@ -348,6 +376,8 @@ def replay_scale(n_jobs: int, seed: int = 0, nodes: int = 16,
         "mg_per_s": n_mg / wall,
         "utilization": s.utilization,
         "makespan_s": s.makespan,
+        "prefilter_batches": getattr(q, "n_prefilter_batches", 0),
+        "sync_fast": g._flat.n_sync_fast if g._flat is not None else 0,
     }]
     for _, label in DEPTH_BUCKETS:
         ts = by_bucket.get(label)
@@ -355,15 +385,17 @@ def replay_scale(n_jobs: int, seed: int = 0, nodes: int = 16,
             continue
         st = summarize(ts)
         rows.append({
-            "kind": "depth_bucket", "queue_depth": label, "n": st["n"],
+            "kind": "depth_bucket", "window": wlabel,
+            "queue_depth": label, "n": st["n"],
             "match_p50_ms": st["median"] * 1e3,
             "match_p75_ms": st["p75"] * 1e3,
             "match_max_ms": st["max"] * 1e3,
         })
     rows.extend(seg_rows)
     print_table(
-        f"scale replay ({n_jobs} jobs, {nodes}-node cluster)",
-        rows[:1], ["jobs", "completed", "n_mg", "replay_wall_s",
+        f"scale replay ({n_jobs} jobs, {nodes}-node cluster, "
+        f"window={wlabel})",
+        rows[:1], ["window", "jobs", "completed", "n_mg", "replay_wall_s",
                    "jobs_per_s", "mg_per_s", "utilization"])
     print_table(
         "match-time percentiles vs queue depth at submit",
@@ -374,6 +406,28 @@ def replay_scale(n_jobs: int, seed: int = 0, nodes: int = 16,
         "throughput per trace segment",
         [r for r in rows if r["kind"] == "segment"],
         ["jobs_done", "wall_s", "jobs_per_s", "mg_per_s"])
+    if emit_name:
+        emit(emit_name, rows)
+    return rows
+
+
+def run_scale_compare(n_jobs: int, seed: int = 0,
+                      nodes: int = 16) -> List[Dict]:
+    """Windowed vs exact EASY on the identical overloaded trace; the
+    acceptance bar for the batched plane is exact sustaining >= 0.5x of
+    windowed jobs/s (vs effectively never finishing before the ledger).
+    Combined rows (window discriminator per row) land in
+    ``trace_throughput.json``."""
+    rows = replay_scale(n_jobs, seed=seed, nodes=nodes,
+                        window=64, emit_name=None)
+    rows += replay_scale(n_jobs, seed=seed, nodes=nodes,
+                         window=None, emit_name=None)
+    by = {r["window"]: r for r in rows if r["kind"] == "summary"}
+    ratio = by["exact"]["jobs_per_s"] / by[64]["jobs_per_s"]
+    rows.append({"kind": "compare", "exact_vs_windowed_jobs_per_s": ratio})
+    print(f"\nexact vs windowed(64) throughput: "
+          f"{by['exact']['jobs_per_s']:.1f} vs "
+          f"{by[64]['jobs_per_s']:.1f} jobs/s ({ratio:.2f}x)")
     emit("trace_throughput", rows)
     return rows
 
@@ -507,7 +561,15 @@ def main(argv=None) -> int:
                          "depth sweep")
     ap.add_argument("--scale", action="store_true",
                     help="single-instance scale replay with throughput "
-                         "curves (default --jobs 100000)")
+                         "curves (default --jobs 100000; the weekly "
+                         "lane runs --jobs 1000000)")
+    ap.add_argument("--window", default="64",
+                    help="EASY backfill window for --scale: an int "
+                         "bound or 'exact' for unbounded ledger-backed "
+                         "EASY (default 64)")
+    ap.add_argument("--compare-exact", action="store_true",
+                    help="with --scale: replay the identical trace "
+                         "windowed AND exact, report the jobs/s ratio")
     ap.add_argument("--actors", action="store_true",
                     help="actor loops vs single driver on a contended "
                          "multi-tenant trace")
@@ -518,8 +580,15 @@ def main(argv=None) -> int:
     if args.scale:
         n = args.jobs if args.jobs is not None else \
             (5000 if args.quick else 100_000)
+        if args.compare_exact:
+            _maybe_profile(args.profile, "scale",
+                           lambda: run_scale_compare(n_jobs=n,
+                                                     seed=args.seed))
+            return 0
+        window = None if args.window == "exact" else int(args.window)
         _maybe_profile(args.profile, "scale",
-                       lambda: replay_scale(n_jobs=n, seed=args.seed))
+                       lambda: replay_scale(n_jobs=n, seed=args.seed,
+                                            window=window))
         return 0
     if args.actors:
         n = args.jobs if args.jobs is not None else \

@@ -138,6 +138,27 @@ def candidate_mask(type_id: np.ndarray, free: np.ndarray,
     return m
 
 
+def batched_candidate_mask(type_id: np.ndarray, free: np.ndarray,
+                           present: np.ndarray, size: np.ndarray,
+                           prop_mask: np.ndarray, agg: np.ndarray,
+                           tid: np.ndarray, min_size: np.ndarray,
+                           req_mask: np.ndarray,
+                           need: np.ndarray) -> np.ndarray:
+    """:func:`candidate_mask` for a whole *request matrix* at once.
+
+    ``tid`` / ``min_size`` / ``req_mask`` are ``[N]`` per-request
+    columns and ``need`` is the dense ``[N, T]`` per-type aggregate
+    requirement; the result is the ``[N, V]`` feasibility mask — one
+    vectorized pass over the pruning table instead of N scans."""
+    base = free & present
+    m = (type_id[None, :] == tid[:, None]) & base[None, :]
+    m &= size[None, :] >= min_size[:, None]
+    rm = req_mask[:, None]
+    m &= (prop_mask[None, :] & rm) == rm
+    m &= (agg[None, :, :] >= need[:, None, :]).all(axis=2)
+    return m
+
+
 # ---------------------------------------------------------------------- #
 # the flat mirror
 # ---------------------------------------------------------------------- #
@@ -158,6 +179,7 @@ class FlatGraph:
         self.n_builds = 0           # full builds incl. compactions
         self.n_agg_sweeps = 0       # vectorized struct-change sweeps
         self.n_bubbles = 0          # incremental dirty-propagations
+        self.n_sync_fast = 0        # sync() calls short-circuited clean
         self._build()
 
     # -- construction --------------------------------------------------- #
@@ -186,6 +208,19 @@ class FlatGraph:
         self._pending: List[Tuple[int, int, int]] = []
         self._struct_dirty = True       # forces first sweep + level calc
         self._levels: List[np.ndarray] = []
+        # sync fast-path: graph.version at the last settle.  Every
+        # mutation hook stamps it stale, so a clean sync() is one int
+        # compare — a kick that syncs via the dispatcher, the matcher,
+        # and feasible_roots settles exactly once.
+        self._synced_version = -1
+        # compiled-request cache.  Requests resolve against the type /
+        # property-bit tables only, and those are grow-only between
+        # full builds — so entries stay valid across graph.version
+        # bumps (strictly better than keying on the version, which
+        # would recompile every pending job each kick) and are
+        # invalidated by table growth or a rebuild.
+        self._req_cache: Dict[int, Tuple[ResourceReq, Tuple,
+                                         "_CompiledReq"]] = {}
         idx = self.idx
         for i, p in enumerate(paths):
             v = g.vertex(p)
@@ -272,6 +307,7 @@ class FlatGraph:
             self.props[i] = _NO_PROPS
             self.prop_mask[i] = 0
         self._struct_dirty = True
+        self._synced_version = -1
 
     def on_edge(self, src: str, dst: str) -> None:
         s, d = self.idx[src], self.idx[dst]
@@ -286,6 +322,7 @@ class FlatGraph:
         self.parent[d] = s
         self.children[s].append(d)
         self._struct_dirty = True
+        self._synced_version = -1
 
     def on_remove(self, path: str) -> None:
         i = self.idx.pop(path, None)
@@ -306,6 +343,7 @@ class FlatGraph:
         self.props[i] = _NO_PROPS
         self._tombs += 1
         self._struct_dirty = True
+        self._synced_version = -1
 
     def on_flip(self, path: str, v) -> None:
         """Own free-ness of ``path`` changed (alloc/release/status)."""
@@ -317,6 +355,7 @@ class FlatGraph:
         if was == now:
             return
         self.free[i] = now
+        self._synced_version = -1
         if not self._struct_dirty:
             self._pending.append(
                 (i, int(self.type_id[i]), 1 if now else -1))
@@ -332,12 +371,20 @@ class FlatGraph:
                     self.free[i] = vv.free
         self._pending.clear()
         self._struct_dirty = True
+        self._synced_version = -1
 
     # -- settling ------------------------------------------------------- #
     def sync(self, use_jax: str = "auto") -> None:
         """Settle queued dirty state.  Alloc/release flips bubble their
         deltas up the ancestor chains (vectorized, never a rebuild);
-        topology changes run one vectorized per-level sweep."""
+        topology changes run one vectorized per-level sweep.
+
+        Fast path: the mutation hooks stamp ``_synced_version`` stale,
+        so a second sync in the same kick (dispatcher, then matcher,
+        then a feasibility scan) is a single int compare."""
+        if self.g.version == self._synced_version:
+            self.n_sync_fast += 1
+            return
         if self._struct_dirty:
             self._refresh_levels()
             self._sweep(use_jax)
@@ -345,6 +392,7 @@ class FlatGraph:
             self._struct_dirty = False
         elif self._pending:
             self._bubble_pending()
+        self._synced_version = self.g.version
 
     def _refresh_levels(self) -> None:
         n = self.n
@@ -406,13 +454,30 @@ class FlatGraph:
     def root_indices(self) -> List[int]:
         return [self.idx[r] for r in self.g.roots if r in self.idx]
 
+    def compiled(self, req: ResourceReq) -> "_CompiledReq":
+        """Cached :class:`_CompiledReq` for ``req``.  Compilation reads
+        only the type / property-bit tables, which are grow-only
+        between full builds, so the entry stays valid across
+        ``graph.version`` bumps: an unchanged pending job never
+        recompiles, no matter how much the graph churns."""
+        key = id(req)
+        gen = (len(self.types), len(self.prop_bit), self.prop_overflow)
+        hit = self._req_cache.get(key)
+        if hit is not None and hit[0] is req and hit[1] == gen:
+            return hit[2]
+        if len(self._req_cache) >= 8192:    # deep-backlog bound
+            self._req_cache.clear()
+        c = _CompiledReq(self, req)
+        self._req_cache[key] = (req, gen, c)
+        return c
+
     def feasible_roots(self, req: ResourceReq,
                        use_jax: str = "auto") -> np.ndarray:
         """Indices of vertices where a match of ``req`` could root
         (vectorized necessary-condition scan).  Empty array == the
         request provably cannot match anywhere."""
         self.sync(use_jax)
-        c = _CompiledReq(self, req)
+        c = self.compiled(req)
         if c.tid is None:
             return np.empty(0, np.int64)
         n = self.n
@@ -421,6 +486,62 @@ class FlatGraph:
                               self.prop_mask[:n], self.agg[:n],
                               c.tid, c.min_size, c.req_mask, c.agg_need)
         return np.nonzero(mask)[0]
+
+    def feasible_roots_batch(self, reqs: Sequence[ResourceReq],
+                             use_jax: str = "auto") -> np.ndarray:
+        """``feasible_roots`` for N requests in **one** vectorized pass.
+
+        The compiled requests are stacked into a request matrix and
+        scanned against the ``agg[vertex, type]`` pruning table at
+        once; the result is an ``[N, V]`` boolean feasibility mask
+        (``mask[i].nonzero()`` == ``feasible_roots(reqs[i])``).  A
+        backfill window repeats a handful of request shapes, so rows
+        are deduplicated by compiled signature first — the scan cost is
+        one pass over the *unique* shapes, not over N.
+
+        Dispatch follows :func:`aggregate_sweep`: numpy on CPU
+        backends, the ``kernels/feasibility.py`` jax/Pallas variant on
+        accelerators (``use_jax='jax'`` forces it)."""
+        self.sync(use_jax)
+        n, N = self.n, len(reqs)
+        out = np.zeros((N, n), bool)
+        if N == 0 or n == 0:
+            return out
+        sig_rows: Dict[Tuple, List[int]] = {}
+        for i, req in enumerate(reqs):
+            c = self.compiled(req)
+            if c.tid is None:       # some required type absent: no row
+                continue
+            sig = (c.tid, c.min_size, c.req_mask, tuple(c.agg_need))
+            sig_rows.setdefault(sig, []).append(i)
+        if not sig_rows:
+            return out
+        uniq = list(sig_rows)
+        U, T = len(uniq), len(self.types)
+        tid = np.fromiter((s[0] for s in uniq), np.int32, U)
+        min_size = np.fromiter((s[1] for s in uniq), np.int32, U)
+        req_mask = np.fromiter((s[2] for s in uniq), np.int64, U)
+        need = np.zeros((U, T), np.int32)
+        for u, s in enumerate(uniq):
+            for t, k in s[3]:
+                need[u, t] = k
+        if use_jax == "numpy" or (use_jax == "auto"
+                                  and _jax_backend() in ("", "cpu")):
+            m = batched_candidate_mask(
+                self.type_id[:n], self.free[:n], self.present[:n],
+                self.size[:n], self.prop_mask[:n], self.agg[:n, :T],
+                tid, min_size, req_mask, need)
+        else:
+            from ..kernels.feasibility import batched_feasible_op
+            m = batched_feasible_op(
+                self.type_id[:n], (self.free[:n] & self.present[:n]),
+                self.size[:n], self.prop_mask[:n], self.agg[:n, :T],
+                tid, min_size, req_mask, need) != 0
+        for u, s in enumerate(uniq):
+            row = m[u]
+            for i in sig_rows[s]:
+                out[i] = row
+        return out
 
     # -- verification (tests) ------------------------------------------- #
     def verify_against(self, g=None) -> bool:
@@ -526,7 +647,7 @@ class FlatMatcher:
         self._agg_col: Dict[int, List[int]] = {}
         matched: List[int] = []
         for req in jobspec.resources:
-            c = _CompiledReq(f, req)
+            c = f.compiled(req)
             if c.tid is None:
                 return None
             cand_in = self._cand_counts(c)

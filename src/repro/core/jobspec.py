@@ -98,10 +98,17 @@ class Jobspec:
         return sum(r.graph_size() for r in self.resources)
 
     def type_counts(self) -> Dict[str, int]:
-        """Total requested vertices per type across all resource roots."""
-        out: Dict[str, int] = {}
-        for r in self.resources:
-            r.type_counts(out)
+        """Total requested vertices per type across all resource roots.
+
+        Memoized: a jobspec is read-only once submitted (interned specs
+        are shared across thousands of jobs in the scale replays), and
+        every consumer treats the returned dict as read-only."""
+        out = self.__dict__.get("_tc_cache")
+        if out is None:
+            out = {}
+            for r in self.resources:
+                r.type_counts(out)
+            self.__dict__["_tc_cache"] = out
         return out
 
     # ------------------------------------------------------------------ #

@@ -68,7 +68,8 @@ from typing import Dict, List, Optional
 from ..analysis.lockwitness import named_rlock
 from .events import EventLog, EventType
 from .jobspec import Jobspec
-from .policy import EasyBackfill, PriorityFCFS, SchedulingPolicy
+from .policy import (EasyBackfill, PriorityFCFS, ReservationLedger,
+                     SchedulingPolicy, _path_type_counts, _PendingMirror)
 from .scheduler import SchedulerInstance
 
 
@@ -152,6 +153,15 @@ class Job:
     # identically, so _try_start skips it (deep-backlog replays would
     # otherwise re-run every pending job's failing match per kick).
     nogo_version: Optional[int] = None
+    # batched-prefilter memo: graph.version of the shared-mask scan
+    # that last classified this job, and its verdict (policy.py's
+    # _batch_prefilter writes these, _prefilter_ok reads them)
+    _pf_version: Optional[int] = None
+    _pf_ok: bool = True
+    # EASY skip memo: (graph.version, head.seq) under which every
+    # backfill test already decided "no start" for this job
+    _bf_version: Optional[int] = None
+    _bf_head: Optional[int] = None
 
     @property
     def wait_time(self) -> Optional[float]:
@@ -216,6 +226,16 @@ class JobQueue:
         if scheduler.eventlog is None:
             scheduler.eventlog = self.eventlog
         self.n_preemptions = 0
+        # incremental reservation ledger (core/policy.py): per-type
+        # release timelines of the running jobs, delta-updated by the
+        # lifecycle edges below (all under _api_lock) and consumed by
+        # the policies' shadow/reservation estimators
+        self.ledger = ReservationLedger()
+        self.n_prefilter_batches = 0    # vectorized prefilter scans run
+        # columnar mirror of self.pending (core/policy.py): the
+        # vectorized exact-EASY pass reads it; every pending mutation
+        # below keeps it in sync O(1)
+        self._pmirror = _PendingMirror()
         # one lock serializes EVERY mutation of the queue's lists: the
         # public verbs below take it themselves, so every driver —
         # Instance verbs on RPC session threads, MultiTenantTree's
@@ -280,6 +300,7 @@ class JobQueue:
             # insort_right == append + stable sort, without the O(n)
             # key calls per submit a 100k-deep backlog would pay
             bisect.insort(self.pending, job, key=self.policy.sort_key)
+            self._pmirror.add(job)
             self._log(f"t={job.submit_time:.3f} submit {jobid}")
             self.eventlog.emit(EventType.SUBMIT, jobid,
                                alloc_id=job.alloc_id,
@@ -319,6 +340,7 @@ class JobQueue:
                 # retaining each attempt would grow _by_id (and stats)
                 # without bound
                 self.pending.remove(job)
+                self._pmirror.discard(job)
                 self._by_id.pop(jobid, None)
                 self._version += 1
                 job.state = JobState.CANCELLED
@@ -425,6 +447,7 @@ class JobQueue:
             return
         self.scheduler.release(job.alloc_id, job.paths)
         self.running.remove(job)
+        self.ledger.job_departed(job.jobid)
         self._preempt_blocked.clear()   # resource state really changed
         job.state = state
         job.end_time = min(job.end_time, self.clock.now()) \
@@ -491,6 +514,7 @@ class JobQueue:
     def _activate(self, job: Job) -> None:
         now = self.clock.now()
         self.pending.remove(job)
+        self._pmirror.discard(job)
         job.state = JobState.RUNNING
         job.start_time = now
         job.end_time = now + job.walltime if job.walltime is not None \
@@ -499,6 +523,8 @@ class JobQueue:
             job.requeue_wait += now - job.preempted_at
             job.preempted_at = None
         self.running.append(job)
+        self.ledger.job_started(job.jobid, job.end_time,
+                                _path_type_counts(self, job))
         self._sync_alloc_meta(job.alloc_id)
         self._version += 1
         self._log(f"t={now:.3f} start {job.jobid} via={job.via} "
@@ -538,6 +564,8 @@ class JobQueue:
             if res.victims:
                 self._log(f"t={self.clock.now():.3f} {job.jobid} "
                           f"revoked {','.join(res.victims)}")
+            self.ledger.job_resized(job.jobid, job.end_time,
+                                    _path_type_counts(self, job))
             self._sync_alloc_meta(job.alloc_id)
             self._version += 1
             self._log(f"t={self.clock.now():.3f} grow {job.jobid} "
@@ -583,6 +611,8 @@ class JobQueue:
             self.scheduler.release(job.alloc_id, doomed)
             gone = set(doomed)
             job.paths = [p for p in job.paths if p not in gone]
+            self.ledger.job_resized(job.jobid, job.end_time,
+                                    _path_type_counts(self, job))
             self._sync_alloc_meta(job.alloc_id)
             self._version += 1
             self._log(f"t={self.clock.now():.3f} shrink {job.jobid} "
@@ -642,8 +672,10 @@ class JobQueue:
         job.preemptions += 1
         job.preempted_at = now
         self.n_preemptions += 1
+        self.ledger.job_departed(job.jobid)
         self._sync_alloc_meta(job.alloc_id)
         bisect.insort(self.pending, job, key=self.policy.sort_key)
+        self._pmirror.add(job)
         self._version += 1
         self._log(f"t={now:.3f} preempt {job.jobid} "
                   f"(n={job.preemptions})")
@@ -658,6 +690,13 @@ class JobQueue:
             self._version += 1
             for job in self.pending:
                 job.nogo_version = None
+                job._pf_version = None
+                job._bf_version = None
+            # externally mutated Job fields (priority, walltime)
+            # invalidate the pending mirror's columns the same way
+            self._pmirror.resync(self.pending)
+            self._sigv_fit = None
+            self._sigv_delays = None
 
     def _schedule(self) -> int:
         # nothing changed since the last full pass ended blocked: a

@@ -138,6 +138,145 @@ def test_tombstone_compaction_rebuilds_once():
 
 
 # ---------------------------------------------------------------------- #
+# batched feasibility plane (feasible_roots_batch + compiled-req cache)
+# ---------------------------------------------------------------------- #
+def _churned_graph():
+    """A mid-size graph with enough churn that feasibility genuinely
+    varies across vertices: some cores allocated, one node down."""
+    g = build_cluster(nodes=4, gpus_per_socket=2, mem_per_socket=4)
+    g.set_allocated(sorted(g.by_type("core"))[:24], "busy")
+    g.set_status(sorted(g.by_type("node"))[1], DOWN)
+    return g
+
+
+def _batch_specs():
+    return [
+        Jobspec.hpc(nodes=1, sockets=1, cores=4),
+        Jobspec.hpc(nodes=1, sockets=2, cores=8, gpus=2),
+        Jobspec.hpc(nodes=2, sockets=4, cores=32),
+        Jobspec.hpc(nodes=1, sockets=1, cores=4),     # repeated shape
+        Jobspec.hpc(nodes=8, sockets=16, cores=64),   # unsatisfiable
+    ]
+
+
+def test_feasible_roots_batch_matches_sequential():
+    """Row i of the batched mask must equal feasible_roots(reqs[i]) —
+    including repeated shapes (dedup path) and unsatisfiable rows."""
+    import numpy as np
+    g = _churned_graph()
+    flat = g.flat()
+    reqs = [r for js in _batch_specs() for r in js.resources]
+    from repro.core.jobspec import ResourceReq
+    reqs.append(ResourceReq(type="quantum-annealer", count=1))
+    mask = flat.feasible_roots_batch(reqs)
+    assert mask.shape == (len(reqs), flat.n)
+    for i, r in enumerate(reqs):
+        assert np.array_equal(np.nonzero(mask[i])[0],
+                              flat.feasible_roots(r)), i
+    assert not mask[-1].any()       # unknown type: empty row, no crash
+
+
+def test_feasible_roots_batch_jax_parity():
+    """use_jax='jax' (kernels/feasibility.py XLA path on CPU) must be
+    element-wise identical to the numpy path."""
+    import numpy as np
+    g = _churned_graph()
+    flat = g.flat()
+    reqs = [r for js in _batch_specs() for r in js.resources]
+    m_np = flat.feasible_roots_batch(reqs, use_jax="numpy")
+    m_jax = flat.feasible_roots_batch(reqs, use_jax="jax")
+    assert np.array_equal(m_np, m_jax)
+
+
+def test_batched_path_agrees_with_dict_oracle():
+    """Tier-1 oracle agreement for the batched plane: an all-empty
+    batched mask row set implies the dict DFS fails too, and the flat
+    matcher (whose policies consume the mask) returns the dict oracle's
+    exact paths whenever it matches."""
+    g = _churned_graph()
+    flat = g.flat()
+    for js in _batch_specs():
+        mask = flat.feasible_roots_batch(js.resources)
+        oracle = Matcher(g, use_flat=False).match(js)
+        got = Matcher(g, use_flat=True).match(js)
+        assert got == oracle
+        if not mask.any(axis=1).all():
+            # some request has no feasible root anywhere: the oracle
+            # must agree the jobspec is unmatchable (prefilter safety)
+            assert oracle is None
+
+
+def test_aggregate_sweep_jax_cpu_parity():
+    """The jax aggregate_sweep path must agree element-wise with numpy
+    on CPU (satellite: CI runs this with jax[cpu])."""
+    import numpy as np
+    from repro.core.flatgraph import aggregate_sweep
+    g = _churned_graph()
+    flat = g.flat()
+    flat.sync()
+    n, T = flat.n, len(flat.types)
+    own = np.zeros((n, T), np.int32)
+    live = np.nonzero(flat.present[:n] & flat.free[:n])[0]
+    own[live, flat.type_id[live]] = 1
+    a_np = aggregate_sweep(own, flat.parent[:n], flat._levels,
+                           use_jax="numpy")
+    a_jax = aggregate_sweep(own, flat.parent[:n], flat._levels,
+                            use_jax="jax")
+    assert np.array_equal(a_np, np.asarray(a_jax))
+    assert np.array_equal(a_np, flat.agg[:n, :T])
+
+
+def test_compiled_req_cache_survives_version_bumps():
+    """The same request object never recompiles across alloc/release
+    churn (version bumps leave the type/prop tables untouched); a
+    compacting rebuild refreshes the cache but keeps answers right."""
+    g = build_cluster(nodes=8)
+    flat = g.flat()
+    req = Jobspec.hpc(nodes=1, sockets=1, cores=4).resources[0]
+    c1 = flat.compiled(req)
+    cores = sorted(g.by_type("core"))[:8]
+    g.set_allocated(cores, "churn")
+    g.set_free(cores, "churn")
+    assert flat.compiled(req) is c1
+    assert len(flat.feasible_roots(req)) > 0
+    # tombstone compaction (triggered by the add after heavy removal)
+    # forces a _build: new tables, fresh cache
+    builds = flat.n_builds
+    for k in range(6):
+        remove_subgraph(g, [f"/cluster0/node{k}"])
+    ext = build_cluster(nodes=1, node_prefix="late")
+    sub = ext.extract([p for p in ext.paths() if "late" in p])
+    res = add_subgraph(g, sub)
+    update_metadata(g, res, jobid="late-job")
+    assert flat.n_builds > builds
+    c2 = flat.compiled(req)
+    assert c2 is not c1
+    assert len(flat.feasible_roots(req)) > 0
+
+
+def test_sync_fast_path_once_per_version():
+    """One kick syncs at most once: the first sync after a mutation
+    settles, every repeat at the same graph version takes the version
+    fast-path (the FlatMatcher/feasible_roots double-sync fix)."""
+    g = build_cluster(nodes=2)
+    flat = g.flat()
+    req = Jobspec.hpc(nodes=1, sockets=1, cores=4).resources[0]
+    flat.sync()
+    base = flat.n_sync_fast
+    flat.feasible_roots(req)
+    flat.feasible_roots_batch([req])
+    assert flat.n_sync_fast == base + 2
+    g.set_allocated(sorted(g.by_type("core"))[:4], "j")
+    flat.feasible_roots(req)        # settles: not a fast sync
+    assert flat.n_sync_fast == base + 2
+    flat.feasible_roots(req)
+    assert flat.n_sync_fast == base + 3
+    # a FlatMatcher.match on the settled graph is one fast sync, not two
+    FlatMatcher(flat).match(Jobspec.hpc(nodes=1, sockets=1, cores=4))
+    assert flat.n_sync_fast == base + 4
+
+
+# ---------------------------------------------------------------------- #
 # property-based churn
 # ---------------------------------------------------------------------- #
 if HAS_HYPOTHESIS:

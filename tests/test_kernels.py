@@ -133,3 +133,62 @@ def test_flash_decode_vs_ref(b, h, kvh, S, d, block_k, rng_key):
                             v[i:i + 1, :, :L], causal=False)
         np.testing.assert_allclose(np.asarray(out[i:i + 1]),
                                    np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------- #
+# batched feasibility scan (kernels/feasibility.py)
+# ---------------------------------------------------------------------- #
+def _feasibility_case(seed=0, n_req=11, n_vert=300, n_types=5):
+    """Random request/vertex tables exercising every clause: type
+    mismatch, busy vertices, size floors, 62-bit property masks (both
+    int31 halves), and the per-type aggregate check."""
+    rng = np.random.default_rng(seed)
+    vtype = rng.integers(0, n_types, n_vert, dtype=np.int32)
+    vok = rng.integers(0, 2, n_vert, dtype=np.int32)
+    vsize = rng.integers(1, 64, n_vert, dtype=np.int32)
+    # bits on both sides of the int31 split (bit 40 > 31)
+    vmask = (rng.integers(0, 2, n_vert, dtype=np.int64) << 40
+             | rng.integers(0, 8, n_vert, dtype=np.int64))
+    agg = rng.integers(0, 16, (n_vert, n_types), dtype=np.int32)
+    tid = rng.integers(0, n_types, n_req, dtype=np.int32)
+    msize = rng.integers(1, 48, n_req, dtype=np.int32)
+    rmask = (rng.integers(0, 2, n_req, dtype=np.int64) << 40
+             | rng.integers(0, 4, n_req, dtype=np.int64))
+    need = rng.integers(0, 12, (n_req, n_types), dtype=np.int32)
+    return vtype, vok, vsize, vmask, agg, tid, msize, rmask, need
+
+
+def _feasibility_numpy(vtype, vok, vsize, vmask, agg,
+                       tid, msize, rmask, need):
+    m = (vtype[None, :] == tid[:, None]) & (vok[None, :] != 0)
+    m &= vsize[None, :] >= msize[:, None]
+    m &= (vmask[None, :] & rmask[:, None]) == rmask[:, None]
+    m &= (agg[None, :, :] >= need[:, None, :]).all(axis=2)
+    return m.astype(np.int32)
+
+
+@pytest.mark.parametrize("seed,n_req,n_vert", [
+    (0, 11, 300),       # ragged: pads both request and vertex blocks
+    (1, 8, 256),        # exact block multiples: no padding
+    (2, 1, 33),         # single request, tiny vertex count
+    (3, 40, 1024),      # deep window
+])
+def test_batched_feasible_xla_vs_numpy(seed, n_req, n_vert):
+    from repro.kernels.feasibility import batched_feasible_op
+    case = _feasibility_case(seed, n_req, n_vert)
+    want = _feasibility_numpy(*case)
+    got = batched_feasible_op(*case, use_pallas="xla")
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed,n_req,n_vert", [
+    (0, 11, 300),
+    (1, 8, 256),
+    (4, 13, 97),
+])
+def test_batched_feasible_pallas_interpret_vs_xla(seed, n_req, n_vert):
+    from repro.kernels.feasibility import batched_feasible_op
+    case = _feasibility_case(seed, n_req, n_vert)
+    ref = batched_feasible_op(*case, use_pallas="xla")
+    out = batched_feasible_op(*case, use_pallas="interpret")
+    np.testing.assert_array_equal(out, ref)

@@ -431,3 +431,179 @@ def test_policy_compare_scale_10k():
     assert all(r["completed"] == 10_000 for r in rows.values())
     assert rows["preempt"]["wait_hi_mean_s"] < rows["easy"]["wait_hi_mean_s"]
     assert rows["preempt"]["preemptions"] > 0
+
+
+# ---------------------------------------------------------------------- #
+# reservation ledger: estimator + decision equivalence vs the seed walk
+# ---------------------------------------------------------------------- #
+def _replay_easy(policy, trace, nodes=4):
+    """One contended trace under ``policy``; returns (start map,
+    backfill count, stats)."""
+    q = JobQueue(SchedulerInstance("lw", build_cluster(nodes=nodes)),
+                 clock=SimClock(), policy=policy)
+    for e in trace:
+        q.advance(max(e["arrival"] - q.clock.now(), 0.0))
+        q.submit(e["jobspec"], walltime=e["walltime"],
+                 priority=e.get("priority", 0),
+                 preemptible=e.get("preemptible", False))
+        q.step()
+    q.drain()
+    s = q.stats()
+    assert s.completed == s.submitted
+    assert q.scheduler.allocations == {}
+    starts = {j.jobid: j.start_time for j in q.completed}
+    backfills = sum(1 for line in q.events if " backfill " in line)
+    return starts, backfills, s
+
+
+def test_ledger_estimators_equal_legacy_walk():
+    """shadow_time / reservation_profile answers from the incremental
+    ledger must equal the seed's O(running) rebuild at every step of a
+    contended replay."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.trace_replay import make_contended_trace
+    from repro.core.policy import reservation_profile, shadow_time
+
+    q = JobQueue(SchedulerInstance("le", build_cluster(nodes=4)),
+                 clock=SimClock(), policy=make_policy("easy"))
+    for e in make_contended_trace(120, seed=11):
+        q.advance(max(e["arrival"] - q.clock.now(), 0.0))
+        q.submit(e["jobspec"], walltime=e["walltime"],
+                 priority=e["priority"], preemptible=e["preemptible"])
+        q.step()
+        if q.pending:
+            head = q.pending[0]
+            assert shadow_time(q, head, use_ledger=True) == \
+                shadow_time(q, head, use_ledger=False)
+            window = list(q.pending)[:4]
+            assert reservation_profile(q, window, use_ledger=True) == \
+                reservation_profile(q, window, use_ledger=False)
+    q.drain()
+    assert q.ledger._entries == {}
+
+
+def test_exact_ledger_easy_equals_walk_oracle():
+    """Decision equivalence: ledger-backed exact EASY starts every job
+    at the same time as the seed's reservation_profile-walk EASY
+    (``ledger=False``) on the identical contended trace — and the same
+    holds with the batched prefilter active (a graph above
+    FLAT_MIN_VERTICES)."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.trace_replay import make_contended_trace, make_trace
+
+    trace = make_contended_trace(150, seed=3)
+    s_led, bf_led, _ = _replay_easy(EasyBackfill(), trace)
+    s_walk, bf_walk, _ = _replay_easy(EasyBackfill(ledger=False), trace)
+    assert s_led == s_walk
+    assert bf_led == bf_walk
+
+    # big graph (16 nodes = 881 vertices > FLAT_MIN_VERTICES): the
+    # vectorized prefilter + skip memos are live and must not change
+    # one admission
+    trace16 = make_trace(250, seed=5)
+    s_led, bf_led, _ = _replay_easy(EasyBackfill(), trace16, nodes=16)
+    s_walk, bf_walk, _ = _replay_easy(EasyBackfill(ledger=False),
+                                      trace16, nodes=16)
+    assert s_led == s_walk
+    assert bf_led == bf_walk
+
+
+def test_windowed_easy_unchanged_by_ledger():
+    """The bounded window (Slurm bf_max_job_test analogue) admits the
+    identical set with and without the ledger plane."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.trace_replay import make_contended_trace
+
+    trace = make_contended_trace(150, seed=9)
+    s_led, bf_led, _ = _replay_easy(
+        EasyBackfill(max_candidates=8), trace)
+    s_walk, bf_walk, _ = _replay_easy(
+        EasyBackfill(max_candidates=8, ledger=False), trace)
+    assert s_led == s_walk
+    assert bf_led == bf_walk
+
+
+try:
+    import hypothesis.strategies as hyp_st
+    from hypothesis import given as hyp_given, settings as hyp_settings
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+if HAS_HYPOTHESIS:
+    _churn_event = hyp_st.tuples(
+        hyp_st.floats(0.0, 8.0),        # arrival gap
+        hyp_st.integers(0, 4),          # shape index
+        hyp_st.floats(1.0, 60.0),       # walltime
+        hyp_st.integers(0, 5),          # priority
+    )
+
+    @pytest.mark.slow
+    @hyp_settings(max_examples=30, deadline=None)
+    @hyp_given(hyp_st.lists(_churn_event, min_size=5, max_size=60),
+               hyp_st.integers(0, 1000))
+    def test_ledger_easy_equivalence_under_random_churn(events, seed):
+        """Property (ISSUE 9 satellite): under random submit/finish
+        churn — arrivals, shapes, walltimes, priorities all drawn by
+        hypothesis — ledger-backed exact EASY admits exactly the same
+        backfill set (same per-job start times) as the seed's
+        reservation-profile-walk EASY, and the windowed variant is
+        equally unchanged.  ``drain`` interleaves finishes with starts,
+        so release-order churn is covered too."""
+        shapes = [
+            Jobspec.hpc(nodes=1, sockets=2, cores=32),
+            Jobspec.hpc(nodes=0, sockets=1, cores=8),
+            Jobspec.hpc(nodes=0, sockets=1, cores=16),
+            Jobspec.hpc(nodes=2, sockets=4, cores=64),
+            Jobspec.hpc(nodes=0, sockets=2, cores=16),
+        ]
+        t = 0.0
+        trace = []
+        for gap, si, wt, prio in events:
+            t += gap
+            trace.append({"arrival": t, "jobspec": shapes[si],
+                          "walltime": wt, "priority": prio})
+        for window in (None, 4):
+            s_led, bf_led, _ = _replay_easy(
+                EasyBackfill(max_candidates=window), trace)
+            s_walk, bf_walk, _ = _replay_easy(
+                EasyBackfill(max_candidates=window, ledger=False), trace)
+            assert s_led == s_walk
+            assert bf_led == bf_walk
+
+    @pytest.mark.slow
+    @hyp_settings(max_examples=20, deadline=None)
+    @hyp_given(hyp_st.lists(_churn_event, min_size=5, max_size=40),
+               hyp_st.integers(0, 1000))
+    def test_ledger_consistent_under_preempt_churn(events, seed):
+        """Property: under preemptive churn (random priorities force
+        evictions) the ledger's entries always mirror the running set
+        — start/finish/preempt deltas never leak or drift."""
+        from repro.core.policy import _path_type_counts
+        shapes = [
+            Jobspec.hpc(nodes=1, sockets=2, cores=32),
+            Jobspec.hpc(nodes=0, sockets=1, cores=8),
+            Jobspec.hpc(nodes=0, sockets=1, cores=16),
+            Jobspec.hpc(nodes=1, sockets=1, cores=16),
+            Jobspec.hpc(nodes=0, sockets=2, cores=16),
+        ]
+        q = JobQueue(SchedulerInstance("pc", build_cluster(nodes=2)),
+                     clock=SimClock(), policy=PreemptivePriority())
+        t = 0.0
+        for gap, si, wt, prio in events:
+            t += gap
+            q.advance(max(t - q.clock.now(), 0.0))
+            q.submit(shapes[si], walltime=wt, priority=prio,
+                     preemptible=prio < 3)
+            q.step()
+            want = {j.jobid: (j.end_time, _path_type_counts(q, j))
+                    for j in q.running if j.end_time is not None}
+            assert q.ledger._entries == want
+        q.drain()
+        assert q.ledger._entries == {}

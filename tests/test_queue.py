@@ -413,3 +413,150 @@ def test_easy_backfill_window_bounds_candidates():
         return sum(j.state is JobState.RUNNING for j in fillers)
 
     assert run(max_candidates=None) > run(max_candidates=1) == 1
+
+
+# ---------------------------------------------------------------------- #
+# reservation ledger lifecycle (core/policy.ReservationLedger)
+# ---------------------------------------------------------------------- #
+def _ledger_agrees(q):
+    """The ledger's entries must mirror the running set exactly: one
+    entry per walltimed running job, carrying its end_time and bound
+    path type counts."""
+    from repro.core.policy import _path_type_counts
+    want = {j.jobid: (j.end_time, _path_type_counts(q, j))
+            for j in q.running if j.end_time is not None}
+    assert q.ledger._entries == want, (q.ledger._entries, want)
+
+
+def test_ledger_tracks_start_finish_cancel():
+    q = _queue(nodes=2)
+    a = q.submit(NODE, walltime=10.0)
+    b = q.submit(NODE, walltime=20.0)
+    q.step()
+    assert a.state is JobState.RUNNING and b.state is JobState.RUNNING
+    _ledger_agrees(q)
+    assert q.cancel(b.jobid)
+    _ledger_agrees(q)
+    q.advance(10.0)
+    assert a.state is JobState.COMPLETED
+    _ledger_agrees(q)
+    assert q.ledger._entries == {}
+
+
+def test_ledger_tracks_grow_and_shrink():
+    q = _queue(nodes=2)
+    job = q.submit(NODE, walltime=50.0)
+    q.step()
+    assert job.state is JobState.RUNNING
+    _ledger_agrees(q)
+    n = len(job.paths)
+    assert q.shrink_job(job.jobid, count=4)
+    assert len(job.paths) == n - 4
+    _ledger_agrees(q)
+    assert q.grow_job(job.jobid, Jobspec.hpc(nodes=0, sockets=1,
+                                             cores=4))
+    _ledger_agrees(q)
+    q.drain()
+    assert q.ledger._entries == {}
+
+
+def test_ledger_tracks_preemption():
+    from repro.core import PreemptivePriority
+    g = build_cluster(nodes=1)
+    q = JobQueue(SchedulerInstance("lp", g), clock=SimClock(),
+                 policy=PreemptivePriority())
+    low = q.submit(NODE, walltime=50.0, priority=0, preemptible=True)
+    q.step()
+    assert low.state is JobState.RUNNING
+    _ledger_agrees(q)
+    hi = q.submit(NODE, walltime=10.0, priority=5)
+    q.step()
+    assert low.state is JobState.PREEMPTED
+    assert hi.state is JobState.RUNNING
+    _ledger_agrees(q)               # victim's entry gone, winner's in
+    q.drain()
+    assert low.state is JobState.COMPLETED
+    assert q.ledger._entries == {}
+
+
+def test_kick_clears_prefilter_and_backfill_memos():
+    """kick()'s contract covers the new memo fields too: out-of-band
+    Job mutation re-arms the prefilter and EASY skip memos alongside
+    the failed-match memo."""
+    q = _queue(nodes=1)
+    a = q.submit(NODE, walltime=10.0)
+    b = q.submit(NODE, walltime=10.0)
+    q.step()
+    assert b.state is JobState.PENDING
+    b._pf_version, b._pf_ok = 123, False
+    b._bf_version, b._bf_head = 123, 456
+    q.kick()
+    assert b.nogo_version is None
+    assert b._pf_version is None and b._bf_version is None
+
+
+# ---------------------------------------------------------------------- #
+# columnar pending mirror (core/policy._PendingMirror)
+# ---------------------------------------------------------------------- #
+def _mirror_agrees(q):
+    """Mirror live rows must equal the pending list, column for column."""
+    import numpy as np
+    mir = q._pmirror
+    live = {}
+    for i, j in enumerate(mir.jobs):
+        if j is None:
+            continue
+        assert mir.slot[j.jobid] == i
+        spec, grow, prio = mir.sig_entries[int(mir.sig[i])]
+        assert spec is j.jobspec and grow == j.grow and prio == j.priority
+        wt = mir.wt[i]
+        assert (j.walltime is None and np.isnan(wt)) or wt == j.walltime
+        assert mir.prio[i] == j.priority and mir.seq[i] == j.seq
+        live[j.jobid] = j
+    assert live == {j.jobid: j for j in q.pending}
+
+
+def test_pending_mirror_tracks_queue_churn():
+    """The columnar mirror the vectorized exact-EASY pass reads must
+    stay in sync with ``queue.pending`` through every lifecycle edge:
+    submit, start, cancel, preemption requeue, and kick's resync."""
+    from repro.core import PreemptivePriority
+    g = build_cluster(nodes=1)
+    q = JobQueue(SchedulerInstance("pm", g), clock=SimClock(),
+                 policy=PreemptivePriority())
+    low = q.submit(NODE, walltime=30.0, priority=0, preemptible=True)
+    fillers = [q.submit(NODE, walltime=5.0) for _ in range(4)]
+    q.submit(NODE)                   # walltime None -> NaN column
+    q.step()
+    _mirror_agrees(q)
+    assert q.cancel(fillers[0].jobid)
+    _mirror_agrees(q)
+    hi = q.submit(NODE, walltime=10.0, priority=5)
+    q.step()                         # preempts low -> requeued
+    assert low.state is JobState.PREEMPTED
+    assert hi.state is JobState.RUNNING
+    _mirror_agrees(q)
+    q.kick()                         # full-resync path
+    _mirror_agrees(q)
+    for _ in range(12):
+        q.advance(10.0)
+    _mirror_agrees(q)
+
+
+def test_pending_mirror_compacts_tombstones():
+    """Discards tombstone rather than shift; once tombstones dominate
+    the mirror compacts down to the live set."""
+    q = _queue(nodes=1)
+    blocker = q.submit(NODE, walltime=500.0)
+    q.step()
+    assert blocker.state is JobState.RUNNING
+    jobs = [q.submit(NODE, walltime=1.0) for _ in range(80)]
+    # 80 live rows + the started blocker's tombstone
+    assert q._pmirror.n == 81 and q._pmirror.holes == 1
+    for j in jobs:
+        assert q.cancel(j.jobid)
+    _mirror_agrees(q)
+    # compacted at least once; tombstone residue stays bounded
+    assert q._pmirror.n < 80
+    assert q._pmirror.holes <= 32 or \
+        q._pmirror.holes * 2 <= q._pmirror.n
