@@ -24,6 +24,11 @@ the committed snapshot in ``experiments/bench/baseline/`` and fails
   summary row of the scale replay, windowed AND exact-EASY rows alike
   (higher is better) — the exact row guards the reservation-ledger
   plane specifically.
+* ``metrics_overhead.json`` — ``attached_vs_detached`` throughput
+  ratio per leg (higher is better, 1.0 = observability is free): the
+  metrics plane's producer-overhead contract.  The replay leg is the
+  end-to-end <=5% acceptance surface; the emit leg tracks the raw
+  per-event fold cost.
 
 Improvements are reported but never fail.  A guarded metric missing
 from the current run fails loudly — silently dropping a row is how a
@@ -76,6 +81,13 @@ def _prefilter_keys(rows: List[Dict]) -> Dict[Tuple, float]:
             for r in rows if "speedup" in r}
 
 
+def _overhead_keys(rows: List[Dict]) -> Dict[Tuple, float]:
+    # the ratio rows are size-independent (attached/detached on the
+    # same workload), so quick and full runs compare directly
+    return {(r["leg"],): r["attached_vs_detached"]
+            for r in rows if r.get("kind") == "ratio"}
+
+
 def _scale_keys(rows: List[Dict]) -> Dict[Tuple, float]:
     # quick and weekly runs replay different trace lengths; keying by
     # (window, jobs) routes a size mismatch into the shape-change skip
@@ -114,6 +126,8 @@ def compare(baseline_dir: Path, current_dir: Path,
          "higher", "x"),
         ("trace_throughput.json", "jobs_per_s", _scale_keys,
          "higher", "/s"),
+        ("metrics_overhead.json", "attached_vs_detached", _overhead_keys,
+         "higher", "x"),
     ]
     failures = 0
     compared = 0

@@ -1,0 +1,207 @@
+"""`metrics_overhead` micro-benchmark: what does observability cost?
+
+The metrics plane's contract is that producers pay near-nothing when a
+consumer is attached (one deque append per delivered chunk; folding is
+deferred to the reader) and literally one ``is None`` check when not.
+Two legs measure exactly that:
+
+* **emit** — raw ``EventLog.emit`` throughput with no consumer vs with
+  a live ``MetricsAggregator`` sink attached (the fold-deferred hot
+  path: one deque append per delivered chunk, folding on the
+  aggregator's folder thread);
+* **replay** — end-to-end contended-queue drain (submit batches,
+  SimClock drain; ~5 lifecycle events per job) in jobs/s, detached vs
+  with an aggregator following the journal AND a ``SpanCollector``
+  hanging on the scheduler (the engine/release span paths included).
+  Fold work is flushed inside the attached slot and cyclic GC runs
+  only at round boundaries — see benchmarks/README.md for why.
+
+Each leg also emits a ``{"kind": "ratio", ...}`` row with
+``attached_vs_detached`` = attached/detached throughput.  1.0 means
+free; the acceptance floor is 0.95 (<=5% overhead), enforced by the
+committed baseline under ``check_regression.py`` (higher is better,
+so a run whose ratio drops below baseline-threshold fails CI).
+
+  PYTHONPATH=src python -m benchmarks.metrics_overhead [--quick]
+
+Results land in ``experiments/bench/metrics_overhead.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.core import (EventLog, EventType, Instance, Jobspec,
+                        MetricsAggregator, SimClock, SpanCollector,
+                        build_cluster)
+
+from .common import emit, print_table
+
+SOCKET8 = Jobspec.hpc(nodes=0, sockets=1, cores=8)
+
+
+def bench_emit(n_events: int, attach: bool, trials: int = 3) -> Dict:
+    best: Optional[Dict] = None
+    for _ in range(max(trials, 1)):
+        log = EventLog(clock=SimClock(), maxlen=n_events)
+        agg = None
+        if attach:
+            agg = MetricsAggregator("overhead")
+            agg.follow(log)
+        t0 = time.perf_counter()
+        for i in range(n_events):
+            log.emit(EventType.SUBMIT, f"j{i % 64}", priority=0)
+        dt = time.perf_counter() - t0
+        if agg is not None:
+            assert agg.derived()["n_events"] == n_events
+        row = {"leg": f"emit {'attached' if attach else 'detached'}",
+               "events": n_events, "wall_s": dt,
+               "per_s": n_events / dt}
+        if best is None or row["per_s"] > best["per_s"]:
+            best = row
+    return best
+
+
+def bench_replay_pairs(n_jobs: int, batch: int = 256,
+                       trials: int = 3) -> List[Dict]:
+    """Contended-queue drain throughput, detached vs attached, as
+    PAIRED trials interleaved at *batch* granularity: both variants'
+    instances are live at once and every ~batch-sized drain alternates
+    between them (order flipping each round), so host drift cancels at
+    the tens-of-milliseconds scale instead of the whole-leg scale —
+    whole legs are short enough on quick runs that scheduler jitter
+    would otherwise swamp a few-percent signal.  The ratio row reports
+    the median of per-trial ratios.  The queue never scans more than
+    ``batch`` pending jobs, so the measured cost is lifecycle churn
+    (and its event emission + span recording), not policy-scan
+    blowup."""
+    pairs = []
+    for i in range(max(trials, 1)):
+        pairs.append(_replay_interleaved(n_jobs, batch=batch, phase=i))
+    ratios = sorted(a["per_s"] / d["per_s"] for d, a in pairs)
+    det_best = max((d for d, _ in pairs), key=lambda r: r["per_s"])
+    att_best = max((a for _, a in pairs), key=lambda r: r["per_s"])
+    ratio = ratios[len(ratios) // 2]
+    return [det_best, att_best,
+            {"kind": "ratio", "leg": "replay",
+             "attached_vs_detached": ratio}]
+
+
+def _replay_interleaved(n_jobs: int, batch: int,
+                        phase: int) -> List[Dict]:
+    """One paired trial: identical detached and attached instances,
+    batches alternated between them with the order flipping every
+    round (and every trial, via ``phase``) so neither variant
+    systematically runs in the warmer slot."""
+    inst_d = Instance(graph=build_cluster(nodes=2), name="det",
+                      clock=SimClock())
+    inst_a = Instance(graph=build_cluster(nodes=2), name="att",
+                      clock=SimClock())
+    agg = MetricsAggregator("overhead")
+    agg.follow(inst_a)
+    inst_a.scheduler.span_collector = SpanCollector()
+    t = {"det": 0.0, "att": 0.0}
+    # GC off inside the timed slots, collected between rounds: a
+    # cyclic-GC pass scans the WHOLE heap — including the other
+    # variant's journal — so wherever the allocator happens to trigger
+    # it, that slot eats a pause amplified by the co-resident
+    # instance's objects.  That is a harness artifact, not metrics-
+    # plane cost; both variants' garbage is still collected, just at
+    # the round boundary.
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        done = rnd = 0
+        while done < n_jobs:
+            k = min(batch, n_jobs - done)
+            legs = [(inst_d, "det"), (inst_a, "att")]
+            if (rnd + phase) % 2:
+                legs.reverse()
+            for inst, tag in legs:
+                t0 = time.perf_counter()
+                inst.submit_many([SOCKET8] * k, walltime=1.0)
+                inst.drain()
+                if tag == "att":
+                    # flush INSIDE the attached slot: the folder thread
+                    # wakes asynchronously, so without this its fold
+                    # work lands in whichever slot the OS schedules it
+                    # into — charging it deterministically to the
+                    # attached side is both fairer and far less noisy
+                    agg.flush()
+                t[tag] += time.perf_counter() - t0
+            done += k
+            rnd += 1
+            gc.collect(0)
+        ev_d = inst_d.events.stats()["next"]
+        ev_a = inst_a.events.stats()["next"]
+        d = agg.derived()
+        assert d["n_events"] == ev_a
+        assert d["busy_now"] == 0
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+        inst_d.close()
+        inst_a.close()
+    return [{"leg": "replay detached", "events": ev_d, "jobs": n_jobs,
+             "wall_s": t["det"], "per_s": n_jobs / t["det"]},
+            {"leg": "replay attached", "events": ev_a, "jobs": n_jobs,
+             "wall_s": t["att"], "per_s": n_jobs / t["att"]}]
+
+
+def run(n_events: int = 200_000, n_jobs: int = 100_000) -> List[Dict]:
+    _replay_interleaved(min(n_jobs // 10, 1_000), batch=256,
+                        phase=0)                            # warmup
+    rows = [
+        bench_emit(n_events, attach=False),
+        bench_emit(n_events, attach=True),
+    ]
+    det = next(r for r in rows if r["leg"] == "emit detached")
+    att = next(r for r in rows if r["leg"] == "emit attached")
+    ratios: List[Dict] = [
+        # the emit ratio is report-only context: a bare emit loop does
+        # nothing BUT emit, so the full per-event fold cost lands on it
+        # undiluted — the acceptance surface is the replay ratio below
+        {"kind": "ratio", "leg": "emit",
+         "attached_vs_detached": att["per_s"] / det["per_s"]},
+    ]
+    # quick-sized legs are short enough that host jitter needs more
+    # pairs to vote it down; full legs are ~50x longer and self-average
+    replay_rows = bench_replay_pairs(n_jobs,
+                                     trials=5 if n_jobs <= 10_000 else 3)
+    rows.extend(r for r in replay_rows if "per_s" in r)
+    ratios.extend(r for r in replay_rows if r.get("kind") == "ratio")
+    print_table("metrics_overhead: producer cost of the metrics plane",
+                rows, ["leg", "events", "wall_s", "per_s"])
+    for r in ratios:
+        overhead = (1.0 - r["attached_vs_detached"]) * 100.0
+        print(f"{r['leg']}: attached/detached = "
+              f"{r['attached_vs_detached']:.3f} "
+              f"({overhead:+.1f}% overhead)")
+    replay_ratio = next(r["attached_vs_detached"] for r in ratios
+                        if r["leg"] == "replay")
+    verdict = "within" if replay_ratio >= 0.95 else "EXCEEDS"
+    print(f"acceptance: end-to-end replay overhead "
+          f"{(1.0 - replay_ratio) * 100.0:+.1f}% — {verdict} the 5% "
+          f"budget (floor enforced by the committed baseline)")
+    emit("metrics_overhead", rows + ratios)
+    return rows + ratios
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--jobs", type=int, default=None)
+    args = ap.parse_args(argv)
+    if args.jobs is not None:
+        n_jobs = args.jobs
+    else:
+        n_jobs = 2_000 if args.quick else 100_000
+    run(n_events=50_000 if args.quick else 200_000, n_jobs=n_jobs)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

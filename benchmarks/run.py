@@ -71,6 +71,12 @@ def main() -> int:
     api_events.run(n_events=5_000 if args.quick else 20_000,
                    repeat=5 if args.quick else 20)
 
+    print("#" * 72)
+    print("# metrics plane — producer overhead, attached vs detached")
+    from . import metrics_overhead
+    metrics_overhead.run(n_events=50_000 if args.quick else 200_000,
+                         n_jobs=2_000 if args.quick else 100_000)
+
     if not args.skip_roofline:
         print("#" * 72)
         print("# roofline over dry-run artifacts (brief §Roofline)")

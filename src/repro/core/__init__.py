@@ -15,9 +15,12 @@ from .policy import (POLICIES, ConservativeBackfill, EasyBackfill, FCFS,
                      FirstFit, PreemptivePriority, PriorityFCFS,
                      SchedulingPolicy, make_policy)
 from .events import EventLog, EventType, JobEvent
+from .metrics import (MetricsAggregator, QuantileSketch, SpanCollector,
+                      fragmentation)
 from .api import (Instance, JobHandle, RemoteInstance, RemoteJobHandle,
                   RemoteSubscription)
-from .tenancy import FairShareArbiter, MultiTenantTree, TenantSpec
+from .tenancy import (FairShareArbiter, Lease, LeaseLedger, MultiTenantTree,
+                      TenantSpec)
 from .external import (AWS_ZONES, TABLE3_CATALOG, ExternalProvider,
                        InstanceType, ProvisionResult, SimulatedEC2Provider,
                        TPUSliceProvider, fleet_catalog)
@@ -37,6 +40,8 @@ __all__ = [
     "ClientReactor", "ProtocolError", "RPCError", "RPCServer",
     "SocketTransport",
     "EventLog", "EventType", "JobEvent",
+    "MetricsAggregator", "QuantileSketch", "SpanCollector", "fragmentation",
+    "Lease", "LeaseLedger",
     "Instance", "JobHandle", "RemoteInstance", "RemoteJobHandle",
     "RemoteSubscription",
     "POLICIES", "ConservativeBackfill", "EasyBackfill", "FCFS",

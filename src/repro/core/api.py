@@ -699,6 +699,21 @@ class RemoteInstance:
     def advance(self, dt: float) -> int:
         return self._call("advance", dt=dt).get("started", 0)
 
+    # -- fleet observability (served by runtime/dashboard.py when a
+    # ClusterHealth consumer is registered on the target) ------------- #
+    def status(self) -> Dict:
+        """Compact fleet-health snapshot: utilization, wait
+        percentiles, churn, lease debt."""
+        return self._call("status")
+
+    def metrics(self) -> Dict:
+        """Full derived-metrics dump (per tenant + fleet rollup)."""
+        return self._call("metrics")
+
+    def tenants(self) -> Dict:
+        """Per-tenant usage / weight / burn / lease rows."""
+        return self._call("tenants")
+
     def close(self) -> None:
         self.transport.close()
 

@@ -182,7 +182,40 @@ class GrowEngine:
         ``preempt=True`` arms the revoke path: after free-resource
         reclaim fails, sibling subtrees may evict preemptible
         allocations of priority strictly below ``priority``.
+
+        When a span collector is attached to the host
+        (``host.span_collector``), each grow additionally records one
+        structured ``match_grow`` span with per-stage wall times
+        (local_match / reclaim / revoke / forward / external / splice —
+        see docs/OBSERVABILITY.md).  Detached, the only cost is one
+        attribute read and ``None`` check per grow; the record call
+        happens *after* every per-stage lock is released (R2/R3).
         """
+        col = getattr(self.host, "span_collector", None)
+        if col is None:
+            return self._grow(jobspec, jobid, requester=requester,
+                              encode=encode, priority=priority,
+                              preempt=preempt, stages=None)
+        stages: Dict[str, float] = {}
+        t0 = time.perf_counter()
+        res = self._grow(jobspec, jobid, requester=requester,
+                         encode=encode, priority=priority,
+                         preempt=preempt, stages=stages)
+        dur = time.perf_counter() - t0
+        rec = res.timing
+        if rec is not None:
+            stages["local_match"] = rec.t_match
+            if rec.t_add_upd:
+                stages["splice"] = rec.t_add_upd
+        col.record({"name": "match_grow", "level": self.host.name,
+                    "jobid": jobid, "ok": bool(res), "via": res.via,
+                    "dur": dur, "stages": stages})
+        return res
+
+    def _grow(self, jobspec: Jobspec, jobid: str, *,
+              requester: Optional[str], encode: bool, priority: int,
+              preempt: bool,
+              stages: Optional[Dict[str, float]]) -> GrowResult:
         host = self.host
         rec = MGTiming(level=host.name, jobid=jobid,
                        request_size=jobspec.graph_size())
@@ -210,35 +243,47 @@ class GrowEngine:
             rec.matched_locally = True
             rec.matched_size = size
             host.timings.append(rec)
-            self._emit_grow(jobid, "local", size)
+            self._emit_grow(jobid, "local", size, n_paths=len(paths))
             return GrowResult(
                 True, new_paths=list(paths), size=size, via="local",
                 timing=rec,
                 jgf=sub.to_jgf_bytes() if encode else None)
 
         # 2. sibling routing: reclaim from other child subtrees first
+        t1 = time.perf_counter() if stages is not None else 0.0
         res = self._reclaim_from_children(jobspec, jobid, requester, rec,
                                           encode)
+        if stages is not None:
+            stages["reclaim"] = time.perf_counter() - t1
         if res is not None:
             return res
 
         # 2b. preemptive reclaim: evict lower-priority work from
         # sibling subtrees (gated by the fair-share arbiter, if any)
         if preempt:
+            t1 = time.perf_counter() if stages is not None else 0.0
             res = self._reclaim_from_children(jobspec, jobid, requester,
                                               rec, encode, preempt=True,
                                               priority=priority)
+            if stages is not None:
+                stages["revoke"] = time.perf_counter() - t1
             if res is not None:
                 return res
 
         # 3. forward up the hierarchy (preempt semantics travel along)
+        t1 = time.perf_counter() if stages is not None else 0.0
         res = self._forward_to_parent(jobspec, jobid, rec,
                                       priority=priority, preempt=preempt)
+        if stages is not None and host.parent is not None:
+            stages["forward"] = time.perf_counter() - t1
         if res is not None:
             return res
 
         # 4. external fallback (top level, or any level when enabled)
+        t1 = time.perf_counter() if stages is not None else 0.0
         res = self._provision_external(jobspec, jobid, rec, encode)
+        if stages is not None and host.external is not None:
+            stages["external"] = time.perf_counter() - t1
         if res is not None:
             return res
 
@@ -254,13 +299,37 @@ class GrowEngine:
         return alloc
 
     def _emit_grow(self, jobid: str, via: str, size: int,
-                   victims: Optional[List[str]] = None) -> None:
+                   victims: Optional[List[str]] = None,
+                   n_paths: int = 0) -> None:
         """Typed GROW event into the host's event log, if one is wired
-        (grow/shrink are first-class observable operations)."""
+        (grow/shrink are first-class observable operations).
+        ``n_paths`` is the vertex count the allocation gained — the
+        detail metrics consumers fold into busy-capacity ledgers."""
         log = getattr(self.host, "eventlog", None)
         if log is not None:
             log.emit(EventType.GROW, jobid, via=via, size=size,
-                     victims=list(victims or ()))
+                     n_paths=n_paths, victims=list(victims or ()))
+
+    def _record_lease(self, donor: str, jobid: str,
+                      requester: Optional[str], paths: List[str],
+                      preempt: bool, n_victims: int) -> None:
+        """Sibling donations are *leases*: when a fair-share arbiter
+        (and thus its ledger) sits on this host, record (donor,
+        borrower, vertices, t) so the donated-capacity debt is
+        observable and the return-home policy can settle it.  Called
+        outside ``host.lock`` — the ledger takes only its own lock and
+        never calls out (R2/R3)."""
+        arb = getattr(self.host, "arbiter", None)
+        ledger = getattr(arb, "ledger", None) if arb is not None else None
+        if ledger is None:
+            return
+        log = getattr(self.host, "eventlog", None)
+        t = None
+        if log is not None and log.clock is not None:
+            t = log.clock.now()
+        ledger.record(donor=donor, borrower=requester or self.host.name,
+                      jobid=jobid, paths=paths, t=t, preempt=preempt,
+                      n_victims=n_victims)
 
     def _reclaim_from_children(self, jobspec: Jobspec, jobid: str,
                                requester: Optional[str], rec: MGTiming,
@@ -313,7 +382,9 @@ class GrowEngine:
             rec.n_victims = len(victims)
             host.timings.append(rec)
             self._emit_grow(jobid, f"sibling:{name}", rec.matched_size,
-                            victims)
+                            victims, n_paths=len(donated))
+            self._record_lease(name, jobid, requester, list(donated),
+                               preempt, len(victims))
             if victims:
                 # ride inside the JGF payload so intermediate levels
                 # forward it verbatim; splice_jgf only reads "graph"
@@ -405,7 +476,8 @@ class GrowEngine:
         rec.matched_size = tres.total_size
         rec.ancestors_updated = tres.ancestors_updated
         host.timings.append(rec)
-        self._emit_grow(jobid, "parent", tres.total_size, victims)
+        self._emit_grow(jobid, "parent", tres.total_size, victims,
+                        n_paths=len(tres.new_paths))
         return GrowResult(
             True, new_paths=list(tres.new_paths), size=tres.total_size,
             via="parent", timing=rec, jgf=bytes(resp),  # verbatim
@@ -433,7 +505,8 @@ class GrowEngine:
         rec.matched_size = result.subgraph.size
         rec.ancestors_updated = tres.ancestors_updated
         host.timings.append(rec)
-        self._emit_grow(jobid, "external", result.subgraph.size)
+        self._emit_grow(jobid, "external", result.subgraph.size,
+                        n_paths=len(tres.new_paths))
         return GrowResult(
             True, new_paths=list(tres.new_paths), size=result.subgraph.size,
             via="external", timing=rec,

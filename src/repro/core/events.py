@@ -95,6 +95,12 @@ class EventLog:
         self._events: List[JobEvent] = []
         self._base = 0                  # seq of _events[0]
         self._next = 0                  # next seq to assign
+        # monotonic count of head events trimmed past maxlen: replay
+        # consumers compare it (or the `oldest` watermark in stats())
+        # across polls to detect that a gap opened between reads, and
+        # mark their derived metrics as resynced instead of silently
+        # folding a truncated stream
+        self._dropped = 0
         self._lock = named_rlock("eventlog")
         # (callback, join cursor): a subscriber only receives events
         # with seq >= its join cursor, so a since()-then-subscribe
@@ -140,6 +146,7 @@ class EventLog:
                     drop = len(self._events) - self.maxlen
                     del self._events[:drop]
                     self._base += drop
+                    self._dropped += drop
                 self._delivery.append(ev)
                 if not self._delivering:
                     # this frame becomes the drainer; any frame that
@@ -203,11 +210,34 @@ class EventLog:
     # ------------------------------------------------------------------ #
     def since(self, cursor: int = 0) -> Tuple[List[JobEvent], int]:
         """Replay: events with ``seq >= cursor`` (oldest retained if the
-        cursor fell behind) and the cursor to pass next time."""
+        cursor fell behind) and the cursor to pass next time.
+
+        Gap detection: when the cursor fell behind the retained window,
+        the first returned event has ``seq > cursor`` — the caller lost
+        ``events[0].seq - cursor`` events to truncation (see
+        :meth:`stats` for the monotonic ``dropped`` count and the
+        ``oldest`` watermark)."""
         with self._lock:
             lo = max(cursor - self._base, 0)
             out = list(self._events[lo:])
             return out, self._next
+
+    @property
+    def dropped(self) -> int:
+        """Monotonic count of events trimmed past ``maxlen``."""
+        with self._lock:
+            return self._dropped
+
+    def stats(self) -> Dict[str, int]:
+        """Truncation accounting for gap-aware replay consumers:
+        ``next`` (the live cursor), ``oldest`` (the truncation
+        watermark — seq of the oldest retained event; a replay cursor
+        below it has lost events), ``retained``, the monotonic
+        ``dropped`` count, and ``maxlen``."""
+        with self._lock:
+            return {"next": self._next, "oldest": self._base,
+                    "retained": len(self._events),
+                    "dropped": self._dropped, "maxlen": self.maxlen}
 
     def for_job(self, jobid: str) -> List[JobEvent]:
         with self._lock:

@@ -207,6 +207,12 @@ class JobQueue:
                  policy: Optional[SchedulingPolicy] = None,
                  eventlog: Optional[EventLog] = None):
         self.scheduler = scheduler
+        # one queue, one time base: a caller-supplied event log that
+        # already has a clock defines it (unless the caller also passed
+        # an explicit clock, which then wins below)
+        if clock is None and eventlog is not None \
+                and eventlog.clock is not None:
+            clock = eventlog.clock
         self.clock = clock or WallClock()
         if policy is None:
             policy = EasyBackfill() if backfill else PriorityFCFS()
@@ -223,6 +229,13 @@ class JobQueue:
         # consumer observes the same total order
         self.eventlog = eventlog if eventlog is not None \
             else EventLog(clock=self.clock)
+        if self.eventlog.clock is not self.clock:
+            # clock coherence: every JobEvent must be stamped with the
+            # owning queue's clock (sim or wall) — a caller-supplied
+            # log with no clock would stamp t=0.0 forever, and one with
+            # a different clock would skew every latency metric derived
+            # from the stream
+            self.eventlog.clock = self.clock
         if scheduler.eventlog is None:
             scheduler.eventlog = self.eventlog
         self.n_preemptions = 0
@@ -570,6 +583,14 @@ class JobQueue:
             self._version += 1
             self._log(f"t={self.clock.now():.3f} grow {job.jobid} "
                       f"+{len(res.new_paths)} via={res.via}")
+            # queue-level GROW keyed by the JOB (the engine's GROW is
+            # keyed by the allocation): ``malleable`` marks a mid-run
+            # resize, which is the delta metrics consumers add to the
+            # job's busy-vertex ledger (start-time grows are already
+            # covered by ALLOC's n_paths)
+            self.eventlog.emit(EventType.GROW, job.jobid,
+                               n_paths=len(res.new_paths), via=res.via,
+                               alloc_id=job.alloc_id, malleable=True)
             return True
 
     def shrink_job(self, jobid: str, paths: Optional[List[str]] = None,

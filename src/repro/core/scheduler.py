@@ -30,6 +30,7 @@ Figures 1/3/4 and its analytical model (Section 6):
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -91,6 +92,11 @@ class SchedulerInstance:
         # or Instance: RELEASE is emitted here, GROW/REVOKE by the
         # engine.  Scheduler-level events are keyed by allocation id.
         self.eventlog = None
+        # optional trace-span sink (core/metrics.py SpanCollector or
+        # anything with .record(dict)): the engine records per-stage
+        # match_grow spans and release() records release spans.  None
+        # (the default) costs producers one attribute check.
+        self.span_collector = None
         # per-instance mutation lock: RPCServer sessions run in their
         # own threads and SocketTransport pools connections, so
         # concurrent MG/release/revoke requests can hit one instance at
@@ -274,11 +280,29 @@ class SchedulerInstance:
         this job) are removed.  The release propagates bottom-up: the
         parent frees its own copies in turn, all the way to the level
         that originally matched the subgraph.
+
+        With a span collector attached, each release records one
+        ``release`` span (this is the latency behind queue-level
+        shrink and free operations); the record happens after every
+        lock is released.
         """
+        col = self.span_collector
+        if col is None:
+            self._release(jobid, paths)
+            return
+        t0 = time.perf_counter()
+        n = self._release(jobid, paths)
+        col.record({"name": "release", "level": self.name,
+                    "jobid": jobid, "ok": n > 0, "via": None,
+                    "dur": time.perf_counter() - t0,
+                    "stages": {}, "n_paths": n})
+
+    def _release(self, jobid: str,
+                 paths: Optional[Sequence[str]] = None) -> int:
         with self.lock:
             alloc = self.allocations.get(jobid)
             if alloc is None:
-                return
+                return 0
             target = list(paths) if paths is not None else list(alloc.paths)
             present = [p for p in target if p in self.graph]
             self.graph.set_free(present, jobid)
@@ -308,6 +332,7 @@ class SchedulerInstance:
         if self.parent is not None and spl:
             self.parent.call("release", pack_json(
                 {"jobid": jobid, "paths": target}))
+        return len(present)
 
     def _remove_departed(self, paths: Sequence[str], jobid: str,
                          book: Set[str]) -> None:

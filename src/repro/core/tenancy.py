@@ -19,14 +19,121 @@ count), so the arbiter works across socket links too.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
 
+from ..analysis.lockwitness import named_lock
 from .api import Instance
 from .graph import ResourceGraph
 from .policy import SchedulingPolicy
 from .queue import Clock, Job, JobQueue, SimClock
 from .scheduler import Hierarchy, TreeSpec, build_tree
+from .transform import add_subgraph, update_metadata
+
+
+@dataclass
+class Lease:
+    """One sibling donation: ``donor``'s vertices now serve
+    ``borrower``'s job ``jobid``.  Active until the return-home policy
+    settles it (``returned_t``)."""
+
+    donor: str
+    borrower: str
+    jobid: str
+    paths: List[str] = field(default_factory=list)
+    t: float = 0.0
+    preempt: bool = False           # came through the revoke path
+    n_victims: int = 0
+    returned_t: Optional[float] = None
+
+
+class LeaseLedger:
+    """Accounting for donated capacity (the ROADMAP's donated-capacity
+    gap): every sibling reclaim/revoke records (donor, borrower,
+    vertices, t); the return-home policy settles a lease once the
+    vertices are free again and the borrower's pressure dropped.
+
+    ``debt()`` is the first-class metric: per-donor count of vertices
+    currently leased out.  Conservation holds by construction — every
+    active lease is simultaneously one donor's debt and one borrower's
+    credit — and the metrics surface exposes both sides so consumers
+    can assert it fleet-wide.  Thread-safe; ``record`` never calls out
+    (R2/R3: it may run while a jobqueue API lock is held)."""
+
+    def __init__(self, clock: Optional[Clock] = None,
+                 history: int = 1024):
+        self.clock = clock
+        self._lock = named_lock("leaseledger")
+        self._active: List[Lease] = []
+        self._returned: Deque[Lease] = collections.deque(maxlen=history)
+        self.n_recorded = 0
+        self.n_returned = 0
+
+    def _now(self, t: Optional[float]) -> float:
+        if t is not None:
+            return t
+        return self.clock.now() if self.clock is not None else 0.0
+
+    def record(self, *, donor: str, borrower: str, jobid: str,
+               paths: List[str], t: Optional[float] = None,
+               preempt: bool = False, n_victims: int = 0) -> Lease:
+        lease = Lease(donor=donor, borrower=borrower, jobid=jobid,
+                      paths=list(paths), t=self._now(t),
+                      preempt=preempt, n_victims=n_victims)
+        with self._lock:
+            self._active.append(lease)
+            self.n_recorded += 1
+        return lease
+
+    def settle(self, lease: Lease, t: Optional[float] = None) -> None:
+        with self._lock:
+            if lease in self._active:
+                self._active.remove(lease)
+                lease.returned_t = self._now(t)
+                self._returned.append(lease)
+                self.n_returned += 1
+
+    def active(self) -> List[Lease]:
+        with self._lock:
+            return list(self._active)
+
+    @property
+    def active_count(self) -> int:
+        with self._lock:
+            return len(self._active)
+
+    def debt(self) -> Dict[str, int]:
+        """Per-donor vertices currently leased out."""
+        out: Dict[str, int] = {}
+        with self._lock:
+            for le in self._active:
+                out[le.donor] = out.get(le.donor, 0) + len(le.paths)
+        return out
+
+    def credit(self) -> Dict[str, int]:
+        """Per-borrower vertices currently leased in."""
+        out: Dict[str, int] = {}
+        with self._lock:
+            for le in self._active:
+                out[le.borrower] = out.get(le.borrower, 0) \
+                    + len(le.paths)
+        return out
+
+    def summary(self) -> Dict:
+        """JSON-able metric view (what the ``status`` verb serves)."""
+        with self._lock:
+            debt: Dict[str, int] = {}
+            credit: Dict[str, int] = {}
+            for le in self._active:
+                debt[le.donor] = debt.get(le.donor, 0) + len(le.paths)
+                credit[le.borrower] = \
+                    credit.get(le.borrower, 0) + len(le.paths)
+            return {"active": len(self._active),
+                    "outstanding_vertices": sum(debt.values()),
+                    "debt": debt, "credit": credit,
+                    "recorded": self.n_recorded,
+                    "returned": self.n_returned}
 
 
 class FairShareArbiter:
@@ -37,10 +144,16 @@ class FairShareArbiter:
     requester may displace the donor's work only while the requester is
     strictly under-served relative to the donor.  Unknown tenants get
     weight 1.
+
+    The arbiter also owns the :class:`LeaseLedger`: the engine records
+    every sibling donation (reclaim or revoke) that happens at the host
+    the arbiter sits on, so donated capacity is visible as lease debt
+    instead of silently never returning home.
     """
 
     def __init__(self, weights: Dict[str, float]):
         self.weights = dict(weights)
+        self.ledger = LeaseLedger()
 
     def _normalized(self, name: str, usage: Dict[str, Dict]) -> float:
         u = usage.get(name)
@@ -97,6 +210,7 @@ class MultiTenantTree:
                                           f"delegated-to-{t.name}")
         self.root.arbiter = FairShareArbiter(
             {t.name: t.weight for t in tenants})
+        self.root.arbiter.ledger.clock = self.clock
         # every tenant fronts its subtree through the Instance facade:
         # tenants submit and observe events through the one public API,
         # and each tenant's surface is remotable (serve()) unchanged
@@ -123,6 +237,48 @@ class MultiTenantTree:
         return self.queues[tenant]
 
     # ------------------------------------------------------------------ #
+    # lease return-home policy
+    # ------------------------------------------------------------------ #
+    def return_leases(self) -> int:
+        """Settle leases whose pressure dropped: when the borrowing
+        tenant has no queued demand and the leased vertices sit free at
+        the parent again (the borrower's job released them), the
+        capacity is re-delegated to the donor — extracted from the
+        parent's pool, marked ``delegated-to-<donor>`` there, and
+        spliced back into the donor's subtree graph.  Without this, a
+        donor's revoked subtree never returns home (the ROADMAP's
+        donated-capacity gap).  Returns the number of leases settled.
+
+        Locking: the parent's and the donor's scheduler locks are taken
+        sequentially, never nested, and no transport call happens under
+        either."""
+        ledger = self.root.arbiter.ledger
+        if not ledger.active_count:
+            return 0
+        returned = 0
+        for lease in ledger.active():
+            q = self.queues.get(lease.borrower)
+            if q is not None and q.pending:
+                continue            # borrower pressure still on
+            with self.root.lock:
+                vs = [self.root.graph.get(p) for p in lease.paths]
+                if any(v is None or not v.free for v in vs):
+                    continue        # still allocated (or re-leased)
+                sub = self.root.graph.extract(lease.paths)
+                self.root.graph.set_allocated(
+                    lease.paths, f"delegated-to-{lease.donor}")
+            donor = self.hierarchy[lease.donor]
+            with donor.lock:
+                tres = add_subgraph(donor.graph, sub)
+                update_metadata(donor.graph, tres)
+            ledger.settle(lease)
+            dq = self.queues.get(lease.donor)
+            if dq is not None:
+                dq.kick()           # the donor can schedule onto it now
+            returned += 1
+        return returned
+
+    # ------------------------------------------------------------------ #
     # joint lifecycle driving (one shared SimClock, many queues)
     # ------------------------------------------------------------------ #
     def step(self) -> int:
@@ -132,7 +288,11 @@ class MultiTenantTree:
         first; the loop ends when a full round starts nothing.  With
         ``actors=True`` the rounds run concurrently, one per tenant."""
         if self.actors is not None:
-            return self.actors.step()
+            started = self.actors.step()
+            if self.return_leases() \
+                    and any(q.pending for q in self.queues.values()):
+                started += self.actors.step()
+            return started
         total = 0
         while True:
             for q in self.queues.values():
@@ -140,6 +300,12 @@ class MultiTenantTree:
             started = sum(q.step() for q in self.queues.values())
             total += started
             if started == 0:
+                # fixpoint reached: settle any leases whose pressure
+                # dropped; returned capacity may unblock a donor's
+                # pending work, so run one more round when it does
+                if self.return_leases() \
+                        and any(q.pending for q in self.queues.values()):
+                    continue
                 return total
 
     def advance(self, dt: float) -> int:

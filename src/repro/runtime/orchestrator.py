@@ -102,6 +102,10 @@ class Orchestrator:
         if follow:
             self._unsub = self.api.subscribe(self._on_event)
         self._revoked: Dict[str, List[str]] = {}   # alloc_id -> jobids
+        # journal-truncation resyncs taken (observability: a nonzero
+        # count means derived state was rebuilt from live handles
+        # rather than a complete event replay)
+        self.resyncs = 0
 
     def _on_event(self, ev) -> None:
         # runs on the event log's single-drainer thread: buffer only,
@@ -237,6 +241,7 @@ class Orchestrator:
         cursor = self._cursor
         events, self._cursor = self.api.events_since(cursor)
         if events and events[0].seq > cursor:
+            self.resyncs += 1
             for alloc in mine:
                 for h in self.api.pending(alloc):
                     if h.state is not JobState.PREEMPTED:
